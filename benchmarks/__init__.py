@@ -1,0 +1,10 @@
+"""Benchmark harness — one module per paper table/figure + system analogues.
+
+  analytical_model   — Table I / Fig. 4 (ΔG delay & #G cost trends)
+  circuit_level      — Fig. 5 analogue (per-modulus software throughput of
+                       proposed vs [14]/[15] functional datapaths)
+  synthesis_tables   — Tables II/III echo + our analytical/measured ratios
+  app_level          — Fig. 8 (application-level delay surface)
+  matmul_bench       — RNS int8 matmul vs direct int32/bf16 (system analogue)
+  run                — driver: prints `name,us_per_call,derived` CSV
+"""

@@ -1,0 +1,74 @@
+"""System analogue: the RNS integer matmul as an accelerator substrate.
+
+Measures (CPU, jit'd jnp — relative numbers transfer to the roofline
+analysis, absolute ones are host-CPU):
+
+  * rns_int8   — the paper's datapath: residue channels + deferred fold +
+                 MRC reconstruction (core/rns_linear.rns_int_matmul)
+  * int32      — direct int32 matmul (what the RNS path replaces exactly)
+  * bf16       — the throughput ceiling XLA gives floating matmuls
+
+plus the exactness check that is the RNS path's reason to exist: at deep K,
+int32 einsum accumulation is exact only below 2^31 and fp32 rounds, while
+the RNS path reproduces the int64 oracle.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rns_linear import rns_int_matmul
+
+SHAPES = [(64, 512, 64), (128, 2048, 128)]
+
+
+def _time(fn, *args, reps: int = 5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for (M, K, N) in SHAPES:
+        xq = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+        wq = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+        xf = xq.astype(jnp.bfloat16)
+        wf = wq.astype(jnp.bfloat16)
+
+        rns = jax.jit(rns_int_matmul)
+        i32 = jax.jit(lambda a, b: jax.lax.dot_general(
+            a.astype(jnp.int32), b.astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32))
+        bf = jax.jit(lambda a, b: a @ b)
+
+        t_rns = _time(rns, xq, wq)
+        t_i32 = _time(i32, xq, wq)
+        t_bf = _time(bf, xf, wf)
+
+        got = np.asarray(rns(xq, wq))
+        want = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+        exact = bool(np.allclose(got, want.astype(np.float64), rtol=2e-7))
+
+        tag = f"M{M}K{K}N{N}"
+        print(f"# {tag}: rns={t_rns:.0f}us int32={t_i32:.0f}us "
+              f"bf16={t_bf:.0f}us exact={exact} "
+              f"rns_overhead_vs_int32={t_rns / t_i32:.1f}x")
+        rows.append((f"rns_matmul_{tag}", t_rns,
+                     f"exact={exact},vs_int32={t_rns / t_i32:.2f}x"))
+        rows.append((f"int32_matmul_{tag}", t_i32, ""))
+        rows.append((f"bf16_matmul_{tag}", t_bf, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

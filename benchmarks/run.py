@@ -1,0 +1,40 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints a final `name,us_per_call,derived` CSV (harness contract).
+Usage: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (analytical_model, app_level, circuit_level, matmul_bench,
+                   synthesis_tables)
+    sections = [
+        ("Table I / Fig. 4 (analytical model)", analytical_model),
+        ("Fig. 5 analogue (per-modulus circuit level)", circuit_level),
+        ("Tables II-III (synthesis echo + ratios)", synthesis_tables),
+        ("Fig. 8 (application-level surface)", app_level),
+        ("RNS matmul system analogue", matmul_bench),
+    ]
+    all_rows = []
+    failures = 0
+    for title, mod in sections:
+        print(f"\n===== {title} =====")
+        try:
+            all_rows.extend(mod.run())
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    print("\n===== summary CSV =====")
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Tables II & III: paper-reported synthesis data + our reproducible ratios.
+
+The FreePDK-45nm numbers cannot be re-synthesized without Design Compiler;
+we echo the paper's reported values as reference data and compare them with
+the ratios our analytical model (Table I primitives) predicts for the same
+(n, δ, sign) points — this is the reproducible content of the tables.
+Table II additionally carries the dynamic-range-matched design comparison
+used by the application-level study (Fig. 8 / app_level.py).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.analytical import hiasat_model, matutino_model, proposed_model
+
+# --- paper-reported synthesis results (Table II; FreePDK 45nm) -------------
+TABLE_II = {
+    #  design              delay_ns  area_um2   power_uW
+    "proposed":            (0.92,    1609.70,    685.0),
+    "hiasat14":            (1.13,    2225.93,   1169.0),
+    "tau_3mod":            (2.10,   15974.64,  13331.0),
+    "conv_binary":         (3.22,   32043.63,  31593.0),
+}
+
+# --- paper-reported Table III (n, δ-signed) → per-design delay ratios ------
+TABLE_III_DELAY_RATIOS = {
+    # (n, delta, sign): {design: delay_ratio_vs_proposed}
+    (8, 3, -1): {"hiasat14": 1.07, "matutino15": 1.19},
+    (8, 3, +1): {"hiasat14": 1.40, "matutino15": 1.12},
+    (8, 9, -1): {"hiasat14": 1.16, "matutino15": 1.12},
+    (8, 9, +1): {"hiasat14": 1.22, "matutino15": 1.14},
+    (8, 127, -1): {"hiasat14": 1.19},
+    (8, 127, +1): {"hiasat14": 1.12},
+    (11, 3, -1): {"hiasat14": 1.20, "matutino15": 1.27},
+    (11, 3, +1): {"hiasat14": 1.57, "matutino15": 1.25},
+    (11, 9, -1): {"hiasat14": 1.21, "matutino15": 1.22},
+    (11, 9, +1): {"hiasat14": 1.56, "matutino15": 1.25},
+    (11, 1023, -1): {"hiasat14": 1.19},
+    (11, 1023, +1): {"hiasat14": 1.23},
+}
+
+PAPER_HEADLINE = {"delay_reduction": 0.205, "area_reduction": 0.132,
+                  "power_reduction": 0.280}
+
+
+def run():
+    t0 = time.perf_counter()
+    print("# Table II (paper-reported, 45nm) — echoed reference data")
+    print("design,delay_ns,area_um2,power_uW")
+    for k, (d, a, p) in TABLE_II.items():
+        print(f"{k},{d},{a},{p}")
+
+    print("\n# Table III — paper delay ratio vs our analytical-model ratio")
+    print("n,delta,sign,design,paper_ratio,analytic_ratio,direction_match")
+    matches, total = 0, 0
+    for (n, d, s), designs in TABLE_III_DELAY_RATIOS.items():
+        prop = proposed_model(n, s).delay
+        for name, paper_ratio in designs.items():
+            if name == "hiasat14":
+                ours = hiasat_model(n, d, s).delay / prop
+            else:
+                m = matutino_model(n, d, s)
+                ours = m.delay / prop if m else float("nan")
+            ok = ours > 1.0  # direction: baselines slower than proposed
+            matches += ok
+            total += 1
+            print(f"{n},{d},{'+' if s > 0 else '-'},{name},"
+                  f"{paper_ratio},{ours:.2f},{ok}")
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"\n# headline (paper): -20.5% delay, -13.2% area, -28.0% power "
+          f"vs [14]; analytic direction agreement {matches}/{total}")
+    return [("tables_2_3_synthesis", us,
+             f"direction_agreement={matches}/{total}")]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,4 @@
+"""Architecture registry: one module per assigned arch + the paper's own
+RNS-accelerator configs.  Use `base.get_config(name)` / `--arch <id>`."""
+from .base import (SHAPES, ModelConfig, ShapeConfig, get_config,  # noqa: F401
+                   get_smoke_config, list_archs)

@@ -1,0 +1,178 @@
+"""Model/shape configuration schema and the architecture registry.
+
+Every assigned architecture registers a :class:`ModelConfig` here (one file
+per arch, exact numbers from the assignment) plus a reduced smoke-test config
+of the same family.  Shapes are global (seq_len × global_batch); the launcher
+maps them onto the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional, Tuple
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "register", "get_config",
+           "get_smoke_config", "list_archs", "ARCH_MODULES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention structure -------------------------------------------------
+    # per-layer window sizes are derived from these:
+    #   attention="full"          → every layer full causal
+    #   attention="swa"           → every layer sliding window `window`
+    #   attention="local_global"  → alternating local(window)/global (gemma2)
+    #   attention="none"          → attention-free (pure SSM)
+    attention: str = "full"
+    window: Optional[int] = None
+    global_layers: Tuple[int, ...] = ()   # explicit full-attn layers (hymba)
+    softcap_attn: Optional[float] = None
+    softcap_final: Optional[float] = None
+    pos: str = "rope"                     # rope | sinusoidal
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    post_norm: bool = False               # gemma2 post-sublayer norms
+
+    # --- MoE ------------------------------------------------------------------
+    moe: bool = False
+    num_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1                    # 1: all MoE; 2: alternate dense/MoE
+    shared_expert: bool = False
+    moe_d_ff: int = 0                     # expert hidden dim (d_ff if 0)
+    capacity_factor: float = 1.25
+
+    # --- SSM (mamba2 / hymba) --------------------------------------------------
+    ssm: bool = False
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    hybrid: bool = False                  # parallel attn + ssm heads (hymba)
+
+    # --- frontend ---------------------------------------------------------------
+    frontend: str = "tokens"              # tokens | embeddings (audio/vlm stub)
+
+    # --- misc -------------------------------------------------------------------
+    norm_eps: float = 1e-6
+    act: str = "silu"                     # silu | gelu
+    glu: bool = True
+    tie_embeddings: bool = False
+
+    # --- framework ---------------------------------------------------------------
+    linear_backend: str = "bf16"          # bf16 | rns_int8  (the paper's path)
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"   # full | save_ar (keep TP-AR outputs) | none
+    grad_compression: bool = False   # int8 all-reduce for the grad sync
+    scan_layers: bool = True     # False: unrolled (cost-model validation)
+    optimizer: str = "adamw"              # adamw | adafactor
+    attn_block_kv: int = 1024             # jnp online-softmax kv block
+    # attention execution strategy:
+    #   blocked_jnp  — lax.scan online softmax (lowers everywhere; scores
+    #                  stream through HBM between fused regions)
+    #   flash_kernel — the Pallas kernel (kernels/flash_attention.py): score
+    #                  tiles live in VMEM only ⇒ no O(S²) HBM traffic.  On
+    #                  non-TPU backends the jnp twin executes; the roofline
+    #                  memory term models the kernel (EXPERIMENTS.md §Perf).
+    attn_impl: str = "blocked_jnp"
+    # documentation of shape skips (checked by the dry-run driver)
+    skip_shapes: Tuple[str, ...] = ()
+
+    # ------------------------------------------------------------------ derived
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def layers_per_block(self) -> int:
+        return max(1, self.moe_every)
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.num_layers % self.layers_per_block == 0
+        return self.num_layers // self.layers_per_block
+
+    def window_for_layer(self, layer: int, seq_len: int) -> int:
+        """Effective attention window of a layer (seq_len ⇒ full causal)."""
+        full = max(seq_len, 1 << 30)
+        if self.attention == "full":
+            return full
+        if self.attention == "swa":
+            return self.window if layer not in self.global_layers else full
+        if self.attention == "local_global":
+            return self.window if layer % 2 == 0 else full
+        return full
+
+    def mlp_kind(self, layer: int) -> str:
+        if not self.moe:
+            return "mlp"
+        return "moe" if (layer % self.moe_every) == (self.moe_every - 1) else "mlp"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                             # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: Dict[str, Callable[[], ModelConfig]] = {}
+
+ARCH_MODULES = (
+    "musicgen_large", "moonshot_v1_16b_a3b", "llama4_maverick_400b_a17b",
+    "smollm_135m", "gemma2_2b", "yi_34b", "h2o_danube_1_8b", "hymba_1_5b",
+    "mamba2_1_3b", "phi_3_vision_4_2b", "rns_paper",
+)
+
+
+def register(name: str, full: Callable[[], ModelConfig],
+             smoke: Callable[[], ModelConfig]) -> None:
+    _REGISTRY[name] = full
+    _SMOKE[name] = smoke
+
+
+def _ensure_loaded() -> None:
+    for mod in ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _SMOKE[name]()
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)

@@ -1,0 +1,26 @@
+"""The paper's own configuration, as a framework arch: the RNS-accelerator LM.
+
+`rns-smollm-135m` is the smollm backbone with every linear layer running on
+the paper's twit-RNS integer datapath (`linear_backend="rns_int8"`): int8
+operands, 2^5±δ residue channels from the Section IV-D case-study set,
+deferred-fold matmuls, MRC reverse conversion.  This is the cell used for the
+paper-representative hillclimb in EXPERIMENTS.md §Perf and the system-level
+MAC-accelerator study (paper §V-D).
+"""
+from .base import ModelConfig, register
+import dataclasses
+
+from . import smollm_135m
+
+
+def full() -> ModelConfig:
+    return dataclasses.replace(smollm_135m.full(), name="rns-smollm-135m",
+                               linear_backend="rns_int8")
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(smollm_135m.smoke(), name="rns-smollm-smoke",
+                               linear_backend="rns_int8")
+
+
+register("rns-smollm-135m", full, smoke)

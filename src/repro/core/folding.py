@@ -1,0 +1,139 @@
+"""Vectorized overflow folding ("squeezing") — the TPU adaptation of Stage ④.
+
+The paper's squeezing step folds overflow bits at positions ≥ n back into the
+active range through the congruence 2^(n+j) ≡ |2^(n+j)|_m, using fixed
+combinational blocks with ≤ 6 inputs (LUT6-sized).  A TPU has no LUT6s but has
+cheap 32-bit integer multiply-adds, so the same congruence is applied at a
+different granularity (DESIGN.md §8.3):
+
+    v  =  lo + hi·2^s   ⇒   v ≡ lo + hi·c_s  (mod m),   c_s = |2^s|_m ∈ [0, m)
+
+Each *rung* of the ladder is one shift, one mask, one multiply-by-constant and
+one add — all lane-parallel VPU ops.  Because c_s is fully reduced, one rung
+shrinks a B-bit value to ≈ max(s, B − s + log2 m) + 1 bits; a short static
+ladder (computed once per (bound, modulus) at trace time by
+:func:`fold_schedule`) provably reaches the Stage-④-compatible width, after
+which a bounded number of conditional subtracts canonicalizes into [0, m).
+
+The scheduler *proves* the bound chain: every rung's worst-case output bound
+is computed exactly over the integers, int32 overflow safety is asserted for
+every intermediate product, and the chain must reach `target` within
+`max_rungs` — otherwise construction fails loudly (no silent wraparound).
+This is the "bound lemma" referenced by DESIGN.md; tests exercise it across
+the full δ range.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .twit import Modulus
+
+__all__ = [
+    "fold_schedule",
+    "schedule_output_bound",
+    "fold_np",
+    "fold_jnp",
+    "max_subtracts",
+    "INT32_SAFE",
+]
+
+INT32_SAFE = 2**31 - 1
+
+
+def _rung_bound(bound: int, s: int, c: int) -> int:
+    """Exact worst-case value after one rung applied to values in [0, bound]."""
+    hi_max = bound >> s
+    lo_max = min(bound, (1 << s) - 1)
+    return lo_max + hi_max * c
+
+
+@functools.lru_cache(maxsize=4096)
+def fold_schedule(bound: int, mod: Modulus,
+                  target_multiple: int = 8,
+                  max_rungs: int = 8) -> Tuple[Tuple[int, int], ...]:
+    """Static (shift, constant) ladder reducing values ≤ bound to < target.
+
+    target = target_multiple·m (default 8m ⇒ ≤ 3 conditional subtracts).
+    Greedy: each rung picks the shift minimizing the next bound, subject to
+    int32 safety of hi_max·c_s.  Power-of-two channels need no ladder.
+    """
+    m = mod.m
+    target = target_multiple * m
+    if bound <= INT32_SAFE:
+        pass
+    else:
+        raise ValueError(f"bound {bound} exceeds int32 accumulator range")
+    rungs: List[Tuple[int, int]] = []
+    b = bound
+    while b >= target:
+        best: Tuple[int, int] | None = None
+        best_bound = b
+        # any shift from n..bits(b) is a candidate rung
+        for s in range(mod.n, b.bit_length() + 1):
+            c = (1 << s) % m
+            if c == (1 << s):      # constant not reduced (2^s < m): useless
+                continue
+            nb = _rung_bound(b, s, c)
+            if (b >> s) * c > INT32_SAFE:
+                continue
+            if nb < best_bound:
+                best_bound = nb
+                best = (s, c)
+        if best is None:
+            raise ValueError(
+                f"fold_schedule stalled at bound {b} for modulus {mod} "
+                f"(target {target})")
+        rungs.append(best)
+        b = best_bound
+        if len(rungs) > max_rungs:
+            raise ValueError(
+                f"fold_schedule needs > {max_rungs} rungs for {mod}, "
+                f"bound {bound} — widen target or raise max_rungs")
+    return tuple(rungs)
+
+
+def schedule_output_bound(bound: int, schedule: Sequence[Tuple[int, int]]) -> int:
+    """Exact output bound of a ladder (the proven post-condition)."""
+    b = bound
+    for s, c in schedule:
+        b = _rung_bound(b, s, c)
+    return b
+
+
+def max_subtracts(bound: int, schedule: Sequence[Tuple[int, int]], m: int) -> int:
+    """Number of conditional subtracts needed after the ladder."""
+    out = schedule_output_bound(bound, schedule)
+    return max(0, (out // m))
+
+
+def fold_np(x: np.ndarray, mod: Modulus, bound: int) -> np.ndarray:
+    """Numpy oracle of the ladder + canonicalization.  x int64 in [0, bound]."""
+    x = np.asarray(x, dtype=np.int64)
+    sched = fold_schedule(bound, mod)
+    for s, c in sched:
+        x = (x & ((1 << s) - 1)) + (x >> s) * c
+    for _ in range(max_subtracts(bound, sched, mod.m)):
+        x = np.where(x >= mod.m, x - mod.m, x)
+    return x
+
+
+def fold_jnp(x, mod: Modulus, bound: int):
+    """JAX version (int32 lanes) — used by ref paths and kernel epilogues.
+
+    The schedule is static (baked at trace time); each rung is 4 vector ops.
+    """
+    import jax.numpy as jnp
+
+    sched = fold_schedule(bound, mod)
+    x = x.astype(jnp.int32)
+    for s, c in sched:
+        lo = jnp.bitwise_and(x, (1 << s) - 1)
+        hi = jnp.right_shift(x, s)
+        x = lo + hi * jnp.int32(c)
+    m = jnp.int32(mod.m)
+    for _ in range(max_subtracts(bound, sched, mod.m)):
+        x = jnp.where(x >= m, x - m, x)
+    return x

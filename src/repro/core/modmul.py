@@ -1,0 +1,327 @@
+"""Bit-faithful model of the proposed generic modulo-(2^n ± δ) multiplier.
+
+Implements Algorithm 1 of the paper stage by stage:
+
+  ① Operand splitting  — Γ = 1 + ⌈(n-2)/3⌉ groups; group 0 = (twit, a1, a0),
+     groups γ>=1 = 3-bit slices starting at bit 2, weight 2^(3γ-1).
+  ② Partial-product generation — PP_{γ,η} = |g_γ^A · g_η^B · weight|_m, each a
+     6-input Boolean function; modeled as the 64-entry lookup table the LUT6
+     realizes (tables precomputed per modulus, exactly once).
+  ③ Multi-operand reduction — carry-save accumulation of the Γ² partial
+     products.  Hardware keeps a redundant carry-save pair; the observable
+     arithmetic effect is the plain integer sum, which we model, along with the
+     3:2-counter level count λ = ⌈log_{3/2}(Γ²/2)⌉ used by the analytical model.
+  ④ Squeezing + final modular addition — overflow bits at positions >= n are
+     folded back through the congruence 2^(n+j) ≡ |2^(n+j)|_m using bounded
+     (≤6-input) combinational blocks, then a single twit-compatible
+     carry-propagate addition produces the canonical result.
+
+Every stage records its intermediates in a :class:`StageTrace` so tests can
+verify the internal structure (widths, iteration counts) claimed by the paper,
+not just the end-to-end product.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .twit import Modulus, TwitOperand, decode, encode
+
+__all__ = [
+    "num_groups",
+    "group_weight",
+    "split_operand",
+    "PPTables",
+    "pp_tables",
+    "mulmod_twit",
+    "mulmod_twit_np",
+    "StageTrace",
+    "reduction_levels",
+]
+
+
+# --------------------------------------------------------------- stage 1 ----
+def num_groups(n: int) -> int:
+    """Γ = 1 + ⌈(n-2)/3⌉ (paper, Stage ①)."""
+    return 1 + math.ceil((n - 2) / 3)
+
+
+def group_weight(gamma: int) -> int:
+    """Positional weight 2^w(γ): w(0)=0, w(γ)=3γ-1 for γ>=1."""
+    return 1 if gamma == 0 else 2 ** (3 * gamma - 1)
+
+
+def group_bits(gamma: int, n: int) -> Tuple[int, int]:
+    """(lo_bit, width) of binary bits covered by group γ (γ >= 1)."""
+    lo = 3 * gamma - 1
+    width = min(3, n - lo)
+    return lo, width
+
+
+def split_operand(op: TwitOperand) -> List[int]:
+    """Stage ①: return the list of *group codes* (raw 3-bit patterns).
+
+    Group 0 packs (twit, a1, a0) as t<<2 | a1<<1 | a0.  Groups γ>=1 pack their
+    (up to) 3 binary bits.  The numeric value of a group code is interpreted by
+    :func:`group_value`.
+    """
+    n = op.mod.n
+    gamma_count = num_groups(n)
+    groups = [((op.twit & 1) << 2) | (op.bin & 0b11)]
+    for gamma in range(1, gamma_count):
+        lo, width = group_bits(gamma, n)
+        groups.append((op.bin >> lo) & ((1 << width) - 1))
+    return groups
+
+
+def group_value(code: int, gamma: int, mod: Modulus) -> int:
+    """Numeric (possibly negative) value of a group code, *without* weight."""
+    if gamma == 0:
+        t = (code >> 2) & 1
+        return (code & 0b11) + t * mod.twit_value
+    return code
+
+
+# --------------------------------------------------------------- stage 2 ----
+@dataclasses.dataclass(frozen=True)
+class PPTables:
+    """The 6-input partial-product lookup tables of Stage ②.
+
+    ``table[(γ, η)]`` is a 64-entry int64 vector: index (codeA << 3) | codeB
+    maps to |value(g_γ^A) · value(g_η^B) · 2^{w(γ)+w(η)}|_m ∈ [0, m).
+
+    This is the software image of the LUT6 blocks: the modular reduction of
+    each weighted local product is baked into the table, so Stage ③ only sums.
+    """
+
+    mod: Modulus
+    tables: Dict[Tuple[int, int], np.ndarray]
+
+    @property
+    def count(self) -> int:
+        return len(self.tables)
+
+    def pp(self, gamma: int, eta: int, code_a: int, code_b: int) -> int:
+        return int(self.tables[(gamma, eta)][(code_a << 3) | code_b])
+
+
+@functools.lru_cache(maxsize=256)
+def pp_tables(mod: Modulus) -> PPTables:
+    g = num_groups(mod.n)
+    tables: Dict[Tuple[int, int], np.ndarray] = {}
+    for gamma in range(g):
+        for eta in range(g):
+            tab = np.zeros(64, dtype=np.int64)
+            w = group_weight(gamma) * group_weight(eta)
+            for ca in range(8):
+                va = group_value(ca, gamma, mod)
+                for cb in range(8):
+                    vb = group_value(cb, eta, mod)
+                    tab[(ca << 3) | cb] = (va * vb * w) % mod.m
+            tables[(gamma, eta)] = tab
+    return PPTables(mod=mod, tables=tables)
+
+
+def reduction_levels(n: int) -> int:
+    """λ = ⌈log_{3/2}(Γ²/2)⌉ — 3:2 counter tree depth (paper, Stage ③)."""
+    g2 = num_groups(n) ** 2
+    if g2 <= 2:
+        return 0
+    return math.ceil(math.log(g2 / 2.0, 1.5))
+
+
+# --------------------------------------------------------------- stage 3/4 --
+@dataclasses.dataclass
+class StageTrace:
+    """Intermediates of one multiplication, for white-box tests/benchmarks."""
+
+    groups_a: List[int] = dataclasses.field(default_factory=list)
+    groups_b: List[int] = dataclasses.field(default_factory=list)
+    partial_products: List[int] = dataclasses.field(default_factory=list)
+    csa_sum: int = 0
+    squeeze_iters: int = 0
+    squeeze_values: List[int] = dataclasses.field(default_factory=list)
+    final_bin: int = 0
+    final_twit: int = 0
+    cpa_carry_out: int = 0
+
+
+def _squeeze(value: int, mod: Modulus, trace: StageTrace | None,
+             block_inputs: int = 6) -> int:
+    """Stage ④ front half: iterative overflow folding ("squeezing").
+
+    Folds the aggregate contribution of bit positions >= n back into the
+    active range through fixed combinational blocks with at most
+    ``block_inputs`` inputs: in each step the lowest ``block_inputs`` overflow
+    bits (a chunk c at position n) are replaced by |c · 2^n|_m.  Terminates
+    when the value fits in n+2 bits, the width Stage ④'s twit-compatible adder
+    accepts (paper, "Optional Squeezing for Larger Channel Widths").
+    """
+    n, m = mod.n, mod.m
+    limit = 1 << (n + 2)
+    while value >= limit:
+        hi = value >> n
+        lo = value & mod.mask
+        chunk = hi & ((1 << block_inputs) - 1)
+        rest = hi >> block_inputs
+        folded = (chunk << n) % m
+        value = lo + folded + (rest << (n + block_inputs))
+        if trace is not None:
+            trace.squeeze_iters += 1
+            trace.squeeze_values.append(value)
+        # progress guarantee: each step strictly reduces the overflow word
+        assert value >= 0
+    return value
+
+
+def _final_twit_addition(value: int, mod: Modulus,
+                         trace: StageTrace | None) -> int:
+    """Stage ④ back half: twit-compatible final modular addition.
+
+    Input fits in n+2 bits.  The fixed combinational block transforms the
+    contribution of the top bits into an (n-bit value, twit) pair — for
+    2^n - δ the block starts at position n-1... (the paper folds from bit n-1
+    upward for the minus form and n-2 upward for the plus form because those
+    architectures keep a double-MSD column; arithmetically both reduce the top
+    bits via 2^n ≡ ∓δ).  A single carry-propagate addition plus the [16]
+    twit carry-correction then yields the canonical residue.
+    """
+    n, m = mod.n, mod.m
+    # Combinational block: fold bits >= n (value < 2^(n+2) ⇒ hi ∈ {0,1,2,3});
+    # |hi·2^n|_m is a tiny lookup in hardware (the white/gray blocks of Fig. 2).
+    hi = value >> n
+    lo = value & mod.mask
+    folded = (hi << n) % m
+    s = lo + folded  # CSA + the single carry-propagate addition
+    if trace is not None:
+        trace.cpa_carry_out = min(s >> n, 1)
+    # CPA carry-out handling: each wrap of 2^n is absorbed as the twit value
+    # -sign·δ (the [16] end-around twit correction); for plus moduli this can
+    # briefly go negative, fixed by one +m step — all bounded, no division.
+    # Termination target: any value in [0, max(2^n, m)) is representable as a
+    # (bin, twit) codeword — for 2^n+δ the canonical residues in [2^n, m) use
+    # the twit, so they must NOT be folded again.
+    while True:
+        if s < 0:  # possible for plus moduli after a fold
+            s += m
+            continue
+        if s < (1 << n) or s < m:
+            break
+        s = (s - (1 << n)) + mod.fold_value  # 2^n ≡ -sign·δ = fold_value
+    # s ∈ [0, 2^n): candidate bin with twit 0; canonicalize (bin may still be
+    # >= m for minus moduli — a *valid* redundant form; the paper's output is
+    # the canonical residue, which encode/decode produce).
+    bin_part, twit = encode(s % m, mod)
+    if trace is not None:
+        trace.final_bin, trace.final_twit = bin_part, twit
+    return decode(bin_part, twit, mod)
+
+
+def mulmod_twit(a: TwitOperand | int, b: TwitOperand | int, mod: Modulus,
+                trace: StageTrace | None = None) -> int:
+    """Full 4-stage twit multiplier: returns |A·B|_m (canonical residue).
+
+    Accepts raw residue values or twit operands; raw values are first encoded
+    (Stage ⓪, the representation of Section IV-A).
+    """
+    if not isinstance(a, TwitOperand):
+        a = TwitOperand.from_value(int(a), mod)
+    if not isinstance(b, TwitOperand):
+        b = TwitOperand.from_value(int(b), mod)
+
+    # Stage ①: operand splitting
+    ga = split_operand(a)
+    gb = split_operand(b)
+    if trace is not None:
+        trace.groups_a, trace.groups_b = list(ga), list(gb)
+
+    # Stage ②: modular partial products from the 6-input tables
+    tabs = pp_tables(mod)
+    pps = [tabs.pp(gamma, eta, ca, cb)
+           for gamma, ca in enumerate(ga)
+           for eta, cb in enumerate(gb)]
+    if trace is not None:
+        trace.partial_products = list(pps)
+    # width claim of Section IV-C ②: each PP < m (n bits for 2^n-δ, up to
+    # n+1 bits for 2^n+δ)
+    assert all(0 <= p < mod.m for p in pps)
+
+    # Stage ③: multi-operand (carry-save) reduction — arithmetic effect = sum
+    s = sum(pps)
+    if trace is not None:
+        trace.csa_sum = s
+
+    # Stage ④: squeezing + twit-compatible final modular addition
+    s = _squeeze(s, mod, trace)
+    return _final_twit_addition(s, mod, trace)
+
+
+# ------------------------------------------------------- vectorized (numpy) -
+@functools.lru_cache(maxsize=256)
+def _stacked_tables(mod: Modulus) -> np.ndarray:
+    """(Γ, Γ, 64) int64 table stack for the vectorized model."""
+    g = num_groups(mod.n)
+    tabs = pp_tables(mod)
+    out = np.zeros((g, g, 64), dtype=np.int64)
+    for gamma in range(g):
+        for eta in range(g):
+            out[gamma, eta] = tabs.tables[(gamma, eta)]
+    return out
+
+
+def _split_np(bin_part: np.ndarray, twit: np.ndarray, mod: Modulus) -> np.ndarray:
+    """Vectorized Stage ①: (Γ, ...) group codes."""
+    n = mod.n
+    g = num_groups(n)
+    codes = [((twit & 1) << 2) | (bin_part & 0b11)]
+    for gamma in range(1, g):
+        lo, width = group_bits(gamma, n)
+        codes.append((bin_part >> lo) & ((1 << width) - 1))
+    return np.stack(codes, axis=0)
+
+
+def mulmod_twit_np(a: np.ndarray, b: np.ndarray, mod: Modulus) -> np.ndarray:
+    """Vectorized bit-faithful multiplier over residue arrays (int64 in [0,m)).
+
+    Used as the high-throughput oracle for kernel sweeps and for the
+    microbenchmarks; numerically identical to :func:`mulmod_twit`.
+    """
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    bin_a, twit_a = encode(a, mod)
+    bin_b, twit_b = encode(b, mod)
+    ca = _split_np(bin_a, twit_a, mod)          # (Γ, ...)
+    cb = _split_np(bin_b, twit_b, mod)
+    tabs = _stacked_tables(mod)                 # (Γ, Γ, 64)
+    g = ca.shape[0]
+    s = np.zeros_like(a)
+    for gamma in range(g):
+        for eta in range(g):
+            idx = (ca[gamma] << 3) | cb[eta]
+            s = s + tabs[gamma, eta][idx]
+    # squeeze + final addition, vectorized (bounded loop count is static)
+    n, m = mod.n, mod.m
+    limit = 1 << (n + 2)
+    # static bound on iterations: each squeeze step removes >= 6 overflow bits
+    # then reintroduces <= n+1; worst-case count derived from the max sum.
+    max_sum = (num_groups(n) ** 2) * (m - 1)
+    while max_sum >= limit:
+        hi = s >> n
+        lo = s & mod.mask
+        chunk = hi & 0x3F
+        rest = hi >> 6
+        s = lo + ((chunk << n) % m) + (rest << (n + 6))
+        max_hi = max_sum >> n
+        max_sum = mod.mask + ((max_hi & 0x3F) << n) % m + ((max_hi >> 6) << (n + 6))
+    # final twit addition
+    hi = s >> n
+    lo = s & mod.mask
+    s = lo + (hi << n) % m
+    # bounded canonicalization (<= 3 conditional subtracts by construction)
+    for _ in range(4):
+        s = np.where(s >= m, s - m, s)
+    return s

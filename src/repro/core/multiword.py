@@ -1,0 +1,151 @@
+"""Fixed-width limb arithmetic for TPU-friendly MRC recombination.
+
+TPUs have no int64; the MRC reverse conversion needs up to ~2^65 of headroom
+(the paper's dynamic range).  We represent wide unsigned integers as
+LIMBS × 15-bit limbs held in int32 lanes ("i60" for LIMBS=4, "i75" for 5):
+15-bit limbs keep every partial product (15+15=30 bits) and carry chain safely
+inside int32.  Only three operations are needed by the datapath:
+
+    acc = acc · m + d      (Horner step of MRC recombination, m < 2^15)
+    acc ≥ c / acc − c      (signed-range correction: subtract M if ≥ M/2)
+    float(acc)             (dequantization)
+
+Everything is elementwise over arbitrary leading array dims; works identically
+in numpy (oracle) and jax.numpy (datapath).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "LIMB_BITS",
+    "LIMB_MASK",
+    "to_limbs_const",
+    "limbs_from_scalar",
+    "limbs_horner",
+    "limbs_sub_const",
+    "limbs_ge_const",
+    "limbs_to_float",
+]
+
+LIMB_BITS = 15
+LIMB_MASK = (1 << LIMB_BITS) - 1
+
+
+def to_limbs_const(value: int, nlimbs: int) -> tuple[int, ...]:
+    """Python int → static limb tuple (little-endian)."""
+    if value < 0:
+        raise ValueError("limb constants are unsigned")
+    out = []
+    for _ in range(nlimbs):
+        out.append(value & LIMB_MASK)
+        value >>= LIMB_BITS
+    if value:
+        raise ValueError(f"constant needs more than {nlimbs} limbs")
+    return tuple(out)
+
+
+def _xp(x):
+    import jax.numpy as jnp
+    return jnp if not isinstance(x, np.ndarray) else np
+
+
+def limbs_from_scalar(d, nlimbs: int):
+    """Small nonnegative int32 array (< 2^30) → limb list (little-endian)."""
+    xp = _xp(d)
+    d = d.astype(xp.int32)
+    limbs = []
+    for _ in range(nlimbs):
+        limbs.append(d & LIMB_MASK)
+        d = d >> LIMB_BITS
+    return limbs
+
+
+def _carry_propagate(limbs):
+    """Restore every limb to [0, 2^15) (limbs may hold up to int32 values)."""
+    xp = _xp(limbs[0])
+    out = []
+    carry = xp.zeros_like(limbs[0])
+    for l in limbs:
+        v = l + carry
+        out.append(v & LIMB_MASK)
+        carry = v >> LIMB_BITS
+    # carry out of the top limb must be zero by construction (bounds proven
+    # by the caller); it is dropped here, tests assert the bound.
+    return out
+
+
+def limbs_horner(acc, m: int, d):
+    """acc·m + d  with m < 2^15 and d an int32 array < 2^15·2 (an MRC digit).
+
+    Each limb product l·m < 2^30; adding the incoming carry (< 2^15) and the
+    digit keeps everything < 2^31.
+    """
+    assert 0 < m < (1 << LIMB_BITS) + 1
+    xp = _xp(acc[0])
+    mm = xp.int32(m)
+    prods = [l * mm for l in acc]
+    prods[0] = prods[0] + d.astype(xp.int32)
+    return _carry_propagate(prods)
+
+
+def limbs_sub_const(acc, value: int):
+    """acc − value (value fits the limb count; result assumed nonnegative)."""
+    xp = _xp(acc[0])
+    consts = to_limbs_const(value, len(acc))
+    out = []
+    borrow = xp.zeros_like(acc[0])
+    for l, c in zip(acc, consts):
+        v = l - xp.int32(c) - borrow
+        borrow = (v < 0).astype(xp.int32)
+        out.append(v + borrow * (1 << LIMB_BITS))
+    return out
+
+
+def limbs_const_minus(value: int, acc):
+    """value − acc (assumes value ≥ acc elementwise; caller guards)."""
+    xp = _xp(acc[0])
+    consts = to_limbs_const(value, len(acc))
+    out = []
+    borrow = xp.zeros_like(acc[0])
+    for l, c in zip(acc, consts):
+        v = xp.int32(c) - l - borrow
+        borrow = (v < 0).astype(xp.int32)
+        out.append(v + borrow * (1 << LIMB_BITS))
+    return out
+
+
+def limbs_ge_const(acc, value: int):
+    """Boolean array: acc >= value (lexicographic from the top limb)."""
+    xp = _xp(acc[0])
+    consts = to_limbs_const(value, len(acc))
+    ge = xp.zeros(acc[0].shape, dtype=bool)
+    eq = xp.ones(acc[0].shape, dtype=bool)
+    for l, c in zip(reversed(acc), reversed(consts)):
+        c32 = xp.int32(c)
+        ge = ge | (eq & (l > c32))
+        eq = eq & (l == c32)
+    return ge | eq
+
+
+def limbs_select(pred, a, b):
+    xp = _xp(a[0])
+    return [xp.where(pred, x, y) for x, y in zip(a, b)]
+
+
+def limbs_to_float(acc, dtype=None):
+    """Limb array → float (float32 by default; exact for |v| < 2^24)."""
+    xp = _xp(acc[0])
+    dtype = dtype or (np.float32 if xp is np else None)
+    if xp is np:
+        out = np.zeros(acc[0].shape, dtype=np.float64)
+        for l in reversed(acc):
+            out = out * (1 << LIMB_BITS) + l
+        return out.astype(dtype)
+    import jax.numpy as jnp
+    out = jnp.zeros(acc[0].shape, dtype=jnp.float32)
+    for l in reversed(acc):
+        out = out * jnp.float32(1 << LIMB_BITS) + l.astype(jnp.float32)
+    return out

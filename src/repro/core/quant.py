@@ -1,0 +1,32 @@
+"""Symmetric int8 quantization for the RNS matmul datapath.
+
+Standard per-row (activations) / per-column (weights) symmetric affine
+quantization: q = round(x / s), s = max|x| / 127.  The RNS path then computes
+the *exact* integer product q_x · q_w through residue channels, so the only
+approximation in the whole pipeline is this rounding step — exactly the
+accelerator setting of the paper's §I (RNS-based DNN accelerators [3], [4]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize"]
+
+QMAX = 127.0
+
+
+def quantize_int8(x, axis=-1):
+    """Symmetric int8 quantization along `axis` (None = per-tensor).
+
+    Returns (q int8, scale f32 with keepdims).
+    """
+    ax = axis if axis is None else (axis,) if isinstance(axis, int) else axis
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=ax, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / QMAX
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -QMAX, QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,234 @@
+"""Residue Number System bases: moduli sets, conversion, CRT/MRC reconstruction.
+
+Implements the RNS substrate of Section II-A and the paper's case study of
+Section IV-D:
+
+  * the 12-modulus n=5 set  M = {17, 19, 23, 29, 31, 1024, 35, 37, 39, 41, 43, 47}
+    built on the structure {2^{2n}, 2^n ± δ}, with dynamic range
+    M = 28,620,324,425,937,054,720 ≈ 2^65  (asserted in tests),
+  * the classical 3-modulus set τ = {2^n − 1, 2^n, 2^n + 1} (Table II baseline),
+  * representative n=8 / n=11 channel sets (Table III),
+  * forward conversion (binary → residues), and two reverse converters:
+      - CRT over Python ints (the test oracle),
+      - Mixed-Radix Conversion (MRC) with per-channel small-int digits — the
+        hardware-friendly form the TPU datapath uses (digits < m_i fit int32;
+        the weighted recombination runs in `multiword` limb arithmetic).
+
+Coprimality, admissibility of every δ, and round-trip identity are all
+property-tested.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from .twit import Modulus, is_power_of_two
+
+__all__ = [
+    "RNSBasis",
+    "PAPER_N5_MODULI",
+    "PAPER_N5_DYNAMIC_RANGE",
+    "paper_n5_basis",
+    "tau_basis",
+    "n8_channels",
+    "n11_channels",
+    "basis_for_accumulation",
+]
+
+# The paper's Section IV-D case study set (order as printed).
+PAPER_N5_MODULI: Tuple[int, ...] = (17, 19, 23, 29, 31, 1024, 35, 37, 39, 41, 43, 47)
+# Exact dynamic range claimed in Section IV-D.
+PAPER_N5_DYNAMIC_RANGE = 28_620_324_425_937_054_720
+
+# Representative larger-width channels evaluated in Table III
+# (channel configs for circuit-level study; not necessarily a coprime set).
+N8_CHANNELS: Tuple[int, ...] = (253, 259, 247, 265, 129, 383)     # 2^8∓{3,9,127}
+N11_CHANNELS: Tuple[int, ...] = (2045, 2051, 2039, 2057, 1025, 3071)  # 2^11∓{3,9,1023}
+
+
+def _egcd(a: int, b: int) -> Tuple[int, int, int]:
+    if b == 0:
+        return a, 1, 0
+    g, x, y = _egcd(b, a % b)
+    return g, y, x - (a // b) * y
+
+
+def _modinv(a: int, m: int) -> int:
+    g, x, _ = _egcd(a % m, m)
+    if g != 1:
+        raise ValueError(f"{a} not invertible mod {m}")
+    return x % m
+
+
+@dataclasses.dataclass(frozen=True)
+class RNSBasis:
+    """A pairwise-coprime RNS basis with forward/reverse conversion.
+
+    Channels of the form 2^n ± δ carry a :class:`Modulus` descriptor (the twit
+    datapath); power-of-two channels are reduction-free (mask only).
+    """
+
+    name: str
+    moduli: Tuple[int, ...]
+    channel_n: int | None = None     # force the 2^n±δ channel width
+
+    def __post_init__(self):
+        ms = self.moduli
+        for i in range(len(ms)):
+            for j in range(i + 1, len(ms)):
+                if math.gcd(ms[i], ms[j]) != 1:
+                    raise ValueError(
+                        f"basis {self.name!r} not pairwise coprime: "
+                        f"gcd({ms[i]}, {ms[j]}) != 1")
+
+    # ------------------------------------------------------------ properties
+    @property
+    def k(self) -> int:
+        return len(self.moduli)
+
+    @functools.cached_property
+    def M(self) -> int:
+        """Dynamic range = product of the moduli."""
+        out = 1
+        for m in self.moduli:
+            out *= m
+        return out
+
+    @functools.cached_property
+    def channels(self) -> Tuple[Modulus | None, ...]:
+        """Per-channel 2^n±δ descriptors (None for power-of-two channels)."""
+        out: List[Modulus | None] = []
+        for m in self.moduli:
+            out.append(None if is_power_of_two(m)
+                       else Modulus.from_value(m, n=self.channel_n))
+        return tuple(out)
+
+    # ------------------------------------------------------- CRT (oracle) --
+    @functools.cached_property
+    def _crt_weights(self) -> Tuple[int, ...]:
+        """w_i = M_i · |M_i^{-1}|_{m_i}  with  M_i = M / m_i."""
+        out = []
+        for m in self.moduli:
+            Mi = self.M // m
+            out.append(Mi * _modinv(Mi, m))
+        return tuple(out)
+
+    def to_int(self, residues: Sequence[int]) -> int:
+        """CRT reverse conversion (Python big ints — the reference oracle)."""
+        assert len(residues) == self.k
+        return sum(int(r) * w for r, w in zip(residues, self._crt_weights)) % self.M
+
+    def to_signed(self, residues: Sequence[int]) -> int:
+        """Reverse conversion into the centered range [−M/2, M/2)."""
+        v = self.to_int(residues)
+        return v - self.M if v >= (self.M + 1) // 2 else v
+
+    # --------------------------------------------------------- forward -----
+    def forward(self, x) -> np.ndarray:
+        """Binary → residues.  Accepts ints / numpy arrays (any int dtype).
+
+        Channel i of the output holds |x|_{m_i}; negative inputs map to the
+        representative of the coset (standard signed RNS embedding).
+        """
+        xs = np.asarray(x)
+        if xs.dtype == object or xs.dtype.kind not in "iu":
+            xs = xs.astype(object)
+        out = np.stack([np.mod(xs, m) for m in self.moduli], axis=0)
+        return out
+
+    # ------------------------------------------------- MRC (hardware path) -
+    @functools.cached_property
+    def mrc_inverses(self) -> Tuple[Tuple[int, ...], ...]:
+        """inv[j][i] = |m_i^{-1}|_{m_j}  for i < j  (0 elsewhere).
+
+        Mixed-radix digits:  d_0 = r_0;
+        d_j = |(r_j − (d_0 + d_1 m_0 + … partial)) · …|  computed iteratively:
+            t_j := r_j
+            for i < j:  t_j := |(t_j − d_i) · inv[j][i]|_{m_j}
+            d_j := t_j
+        Every operation stays below m_j ⇒ int32-safe on TPU.
+        """
+        k = self.k
+        inv = [[0] * k for _ in range(k)]
+        for j in range(k):
+            for i in range(j):
+                inv[j][i] = _modinv(self.moduli[i], self.moduli[j])
+        return tuple(tuple(row) for row in inv)
+
+    def mrc_digits(self, residues: Sequence[int]) -> List[int]:
+        """Mixed-radix digits d_i with  x = d_0 + m_0(d_1 + m_1(d_2 + …))."""
+        k = self.k
+        d: List[int] = []
+        for j in range(k):
+            t = int(residues[j]) % self.moduli[j]
+            for i in range(j):
+                t = ((t - d[i]) * self.mrc_inverses[j][i]) % self.moduli[j]
+            d.append(t)
+        return d
+
+    def from_mrc(self, digits: Sequence[int]) -> int:
+        """Horner recombination of mixed-radix digits (oracle form)."""
+        v = 0
+        for dj, mj in zip(reversed(digits), reversed(self.moduli)):
+            v = v * mj + int(dj)
+        return v
+
+    def __str__(self) -> str:  # pragma: no cover
+        return f"RNSBasis({self.name}, k={self.k}, M≈2^{self.M.bit_length() - 1})"
+
+
+# ------------------------------------------------------------ standard bases
+@functools.lru_cache(maxsize=None)
+def paper_n5_basis() -> RNSBasis:
+    """The Section IV-D 12-modulus case-study set (DR ≈ 2^65); every
+    non-pow2 channel is a 2^5±δ twit datapath (17 = 2^5−15, …, 47 = 2^5+15).
+    """
+    return RNSBasis(name="paper-n5-12mod", moduli=PAPER_N5_MODULI,
+                    channel_n=5)
+
+
+@functools.lru_cache(maxsize=None)
+def tau_basis(n: int = 22) -> RNSBasis:
+    """The classical 3-modulus set τ = {2^n − 1, 2^n, 2^n + 1} (Table II)."""
+    return RNSBasis(name=f"tau-{n}", moduli=(2**n - 1, 2**n, 2**n + 1))
+
+
+def n8_channels() -> Tuple[Modulus, ...]:
+    """Table III n=8 channels as Modulus descriptors."""
+    return tuple(Modulus.from_value(m) for m in N8_CHANNELS)
+
+
+def n11_channels() -> Tuple[Modulus, ...]:
+    """Table III n=11 channels as Modulus descriptors."""
+    return tuple(Modulus.from_value(m) for m in N11_CHANNELS)
+
+
+def basis_for_accumulation(max_abs: int, name: str | None = None,
+                           int8_only: bool = True) -> RNSBasis:
+    """Smallest subset of the paper set (largest moduli first) whose dynamic
+    range covers the signed interval [−max_abs, max_abs].
+
+    This is how the framework sizes the RNS basis for an integer matmul: with
+    int8 operands and K-deep accumulation, max_abs = K·127², and the basis
+    must satisfy M > 2·max_abs.  With ``int8_only`` (the MXU kernel path) the
+    2^{2n} = 1024 channel is excluded — its residues are 10-bit and would not
+    fit the int8 operand registers; the eleven 2^5±δ channels all have
+    residues < 47.  Non-kernel (reference) bases may include it (mask-only
+    reduction, exactly as in the paper's set).
+    """
+    target = 2 * max_abs + 1
+    odd = sorted((m for m in PAPER_N5_MODULI if m != 1024), reverse=True)
+    ordered = odd if int8_only else [1024] + odd
+    chosen: List[int] = []
+    prod = 1
+    for m in ordered:
+        chosen.append(m)
+        prod *= m
+        if prod >= target:
+            return RNSBasis(name=name or f"acc-{max_abs}", moduli=tuple(chosen))
+    raise ValueError(
+        f"paper n=5 set (M={prod}) cannot cover max_abs={max_abs}")

@@ -1,0 +1,192 @@
+"""The paper's technique as a first-class framework feature: RNS linear layers.
+
+`rns_dense(x, w)` computes a linear layer whose integer matmul core runs
+entirely in the paper's residue arithmetic:
+
+  1. symmetric int8 quantization (per-row activations, per-column weights),
+  2. forward conversion to the 2^5±δ residue channels of the paper's case
+     study (basis auto-sized from K so the int32 accumulation provably fits
+     the dynamic range — `rns.basis_for_accumulation`),
+  3. per-channel integer matmul with *deferred* modular reduction — the
+     multiplier paper's Stage ③ organization: no reduction inside the K loop,
+     one fold ladder at the end (Stage ④).  On TPU this maps to int8 MXU dots
+     with int32 accumulators (kernels/rns_matmul.py is the Pallas twin of the
+     jnp path used here; both share fold schedules),
+  4. Mixed-Radix (MRC) reverse conversion in int32 limb arithmetic
+     (TPU-native: no int64 anywhere), signed-range correction, dequantize.
+
+Backward: straight-through estimator — gradients flow as if the layer were a
+dense f32 matmul (`jax.custom_vjp`); the forward is *exactly* the int8
+product (tested against an int64 oracle), so training sees a deterministic
+quantized forward with full-precision gradients, the standard QAT setup.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import multiword as mw
+from .quant import quantize_int8
+from .rns import RNSBasis, basis_for_accumulation
+
+__all__ = ["rns_dense", "rns_int_matmul", "reconstruct_mrc"]
+
+
+@functools.lru_cache(maxsize=64)
+def _basis_for_k(k: int) -> RNSBasis:
+    return basis_for_accumulation(k * 127 * 127, name=f"rns-dense-k{k}")
+
+
+def _channel_matmul(xq, wq, basis: RNSBasis):
+    """(M, K) int8 × (K, N) int8 → (C, M, N) int32 canonical residues.
+
+    jnp path of the kernel: int8 residues, int32 accumulation across the full
+    K dim (no per-MAC reduction), one fold ladder per channel at the end.
+    XLA maps the dot to the int8 MXU path on TPU.
+    """
+    from repro.kernels.ref import channel_schedules  # shared fold schedules
+
+    K = xq.shape[-1]
+    moduli = basis.moduli
+    bound = int(K) * max((m - 1) ** 2 for m in moduli)
+    sched, mods, n_sub = channel_schedules(tuple(moduli), bound)
+    outs = []
+    for c, m in enumerate(moduli):
+        a = jnp.mod(xq.astype(jnp.int32), m).astype(jnp.int8)
+        b = jnp.mod(wq.astype(jnp.int32), m).astype(jnp.int8)
+        acc = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        x = acc
+        for r in range(sched.shape[1]):
+            s = int(sched[c, r, 0])
+            cc = int(sched[c, r, 1])
+            x = jnp.bitwise_and(x, (1 << s) - 1) + jnp.right_shift(x, s) * cc
+        for _ in range(n_sub):
+            x = jnp.where(x >= m, x - m, x)
+        outs.append(x)
+    return jnp.stack(outs, axis=0)
+
+
+def reconstruct_mrc(residues, basis: RNSBasis):
+    """(C, ...) int32 canonical residues → signed value as float32.
+
+    MRC digits are computed with per-channel small-int ops (everything below
+    m_j² < 2^12 before the mod); the Horner recombination runs in 15-bit limb
+    arithmetic (`multiword`) so no int64 is ever needed — this is the reverse
+    converter of DESIGN.md §4 step 4.
+    """
+    moduli = basis.moduli
+    k = len(moduli)
+    inv = basis.mrc_inverses
+    digits = []
+    for j in range(k):
+        t = residues[j]
+        for i in range(j):
+            # (t − d_i) may be negative: one conditional +m_j, then multiply
+            # by the precomputed inverse and reduce.
+            t = t - digits[i]
+            t = jnp.where(t < 0, t + moduli[j], t)
+            t = jnp.mod(t * inv[j][i], moduli[j])
+        digits.append(t)
+    nlimbs = (basis.M.bit_length() + 2 + mw.LIMB_BITS - 1) // mw.LIMB_BITS
+    acc = mw.limbs_from_scalar(digits[-1], nlimbs)
+    for j in range(k - 2, -1, -1):
+        acc = mw.limbs_horner(acc, moduli[j], digits[j])
+    half = (basis.M + 1) // 2
+    is_neg = mw.limbs_ge_const(acc, half)
+    pos = mw.limbs_to_float(acc)
+    neg = mw.limbs_to_float(mw.limbs_const_minus(basis.M, acc))
+    return jnp.where(is_neg, -neg, pos)
+
+
+def _channel_matmul_broadcast(xq, wq, basis: RNSBasis):
+    """Beyond-paper optimization (EXPERIMENTS.md §Perf cell C): the
+    broadcast-operand modular matmul.
+
+    Observation: Σ_k x_k·w_k ≡ Σ_k x_k·|w_k|_m (mod m) — the *activation*
+    operand never needs forward conversion; only the (often static) weights
+    do.  All C channels are then fused into ONE int8 MXU matmul
+    (M,K)×(K,C·N) — activations are read once instead of C times, the
+    per-channel small matmuls become a single MXU-shaped contraction, and
+    the C× conversion of activations disappears.  The accumulator can be
+    negative (raw signed x), so the Stage-④ ladder runs on |acc| with a
+    final sign fix-up: (−v) mod m = m − (v mod m).
+
+    Bound: |acc| ≤ K·127·(m−1) — int32-safe for K < 3.6e5 and 1 extra rung.
+    """
+    from repro.kernels.ref import channel_schedules
+
+    K, N = wq.shape
+    moduli = basis.moduli
+    C = len(moduli)
+    bound = int(K) * 127 * max(m - 1 for m in moduli)
+    assert bound < 2**31, f"int32 overflow: K={K}"
+    sched, mods, n_sub = channel_schedules(tuple(moduli), bound)
+    w_res = jnp.concatenate(
+        [jnp.mod(wq.astype(jnp.int32), m).astype(jnp.int8) for m in moduli],
+        axis=-1)                                          # (K, C·N)
+    acc = jax.lax.dot_general(xq, w_res, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)  # (M, C·N)
+    outs = []
+    for c, m in enumerate(moduli):
+        x = acc[:, c * N:(c + 1) * N]
+        neg = x < 0
+        x = jnp.abs(x)
+        for r in range(sched.shape[1]):
+            s = int(sched[c, r, 0])
+            cc = int(sched[c, r, 1])
+            x = jnp.bitwise_and(x, (1 << s) - 1) + jnp.right_shift(x, s) * cc
+        for _ in range(n_sub):
+            x = jnp.where(x >= m, x - m, x)
+        x = jnp.where(neg & (x > 0), m - x, x)            # sign fix-up
+        outs.append(x)
+    return jnp.stack(outs, axis=0)
+
+
+def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
+                   broadcast: bool = True):
+    """Exact int8 matmul through residue channels: (M,K)×(K,N) → f32 (M,N).
+
+    The result equals the int64 product exactly for any K admitted by the
+    basis (property-tested); returned as float32 (exact below 2^24, the
+    usual accelerator dequant precision).  ``broadcast`` selects the fused
+    single-matmul datapath (default; see _channel_matmul_broadcast) vs the
+    paper-literal per-channel conversion (the §Perf baseline).
+    """
+    basis = basis or _basis_for_k(xq.shape[-1])
+    if broadcast:
+        res = _channel_matmul_broadcast(xq, wq, basis)
+    else:
+        res = _channel_matmul(xq, wq, basis)
+    return reconstruct_mrc(res, basis)
+
+
+@jax.custom_vjp
+def rns_dense(x, w):
+    """y = x @ w with the integer core in RNS; straight-through backward."""
+    return _rns_dense_fwd_impl(x, w)
+
+
+def _rns_dense_fwd_impl(x, w):
+    xq, sx = quantize_int8(x, axis=-1)        # per-row
+    wq, sw = quantize_int8(w, axis=0)         # per-column
+    y = rns_int_matmul(xq, wq)
+    return (y * sx * sw).astype(x.dtype)
+
+
+def _fwd(x, w):
+    return _rns_dense_fwd_impl(x, w), (x, w)
+
+
+def _bwd(res, gy):
+    x, w = res
+    gy32 = gy.astype(jnp.float32)
+    gx = (gy32 @ w.astype(jnp.float32).T).astype(x.dtype)
+    gw = (x.astype(jnp.float32).T @ gy32).astype(w.dtype)
+    return gx, gw
+
+
+rns_dense.defvjp(_fwd, _bwd)

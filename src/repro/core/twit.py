@@ -1,0 +1,217 @@
+"""Twit-based residue representation for moduli of the form 2^n ± δ.
+
+This module is the bit-faithful software model of the operand representation in
+Gorgin et al., "A Generic Modulo-(2^n±δ) RNS Multiplier Based on Twit
+Representation" (Section IV-A), building on the twit encoding of their ARITH'25
+modular adder paper [16].
+
+A *twit* (two-valued digit) is a binary variable with lower value L and gap G,
+representing the set {L, L+G}.  Here L = 0 and G = ±δ, so the twit contributes
+
+    twit_value(t) = t * s * δ,
+
+where ``s = +1`` for m = 2^n + δ and ``s = -1`` for m = 2^n - δ (paper
+Example 2: mod (2^5-5), 16 ≡ 10101₂ with twit set ⇒ 21 - 5 = 16; mod (2^5+5),
+16 ≡ 01011₂ with twit set ⇒ 11 + 5 = 16).
+
+A residue A ∈ [0, m) is encoded as an n-bit unsigned ``bin`` plus a twit bit
+``t``:  value(bin, t) = (bin + t*s*δ) mod m.  All 2^(n+1) codewords are valid
+(they all decode to *some* residue); the redundancy absorbs the end-around
+correction so that adders/multipliers never need compare-and-subtract logic in
+their inner stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Modulus",
+    "encode",
+    "encode_all_forms",
+    "decode",
+    "is_power_of_two",
+    "TwitOperand",
+]
+
+
+def is_power_of_two(m: int) -> bool:
+    return m > 0 and (m & (m - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Modulus:
+    """A modulus of the form m = 2^n + sign*delta with twit-admissible delta.
+
+    Attributes:
+      n: channel bit width (the binary part of a residue has n bits).
+      delta: offset, 0 <= delta <= 2^(n-1) - 1 (paper's full admissible range).
+      sign: +1 for m = 2^n + delta, -1 for m = 2^n - delta.
+    """
+
+    n: int
+    delta: int
+    sign: int
+
+    def __post_init__(self):
+        if self.sign not in (-1, +1):
+            raise ValueError(f"sign must be ±1, got {self.sign}")
+        if self.n < 2:
+            raise ValueError(f"need n >= 2, got n={self.n}")
+        if not (0 <= self.delta <= 2 ** (self.n - 1) - 1):
+            raise ValueError(
+                f"delta={self.delta} outside admissible range "
+                f"[0, 2^{self.n - 1}-1] for n={self.n}"
+            )
+
+    # ------------------------------------------------------------------ props
+    @property
+    def m(self) -> int:
+        """The modulus value."""
+        return 2**self.n + self.sign * self.delta
+
+    @property
+    def twit_value(self) -> int:
+        """Value contributed by a set twit bit: s*δ."""
+        return self.sign * self.delta
+
+    @property
+    def fold_value(self) -> int:
+        """Signed equivalent of 2^n:  2^n ≡ -s*δ (mod m)."""
+        return -self.sign * self.delta
+
+    @property
+    def mask(self) -> int:
+        return 2**self.n - 1
+
+    @property
+    def is_pow2(self) -> bool:
+        return self.delta == 0
+
+    @classmethod
+    def from_value(cls, m: int, n: int | None = None) -> "Modulus":
+        """Factor m into a 2^n ± δ form with admissible δ.
+
+        With ``n`` given, force that channel width (the paper's case study
+        keeps all channels at n=5 even where a smaller δ exists at another
+        width, e.g. 17 = 2^5 − 15 rather than 2^4 + 1).  Otherwise prefer
+        the representation with the smallest δ.
+        """
+        if m < 3:
+            raise ValueError(f"modulus too small: {m}")
+        if n is not None:
+            delta = m - 2**n
+            sign = 1 if delta >= 0 else -1
+            return cls(n=n, delta=abs(delta), sign=sign if delta else 1)
+        best = None
+        for nn in range(2, m.bit_length() + 1):
+            base = 2**nn
+            delta = m - base
+            sign = 1 if delta >= 0 else -1
+            d = abs(delta)
+            if d <= 2 ** (nn - 1) - 1 or d == 0:
+                cand = cls(n=nn, delta=d, sign=sign if d else 1)
+                if best is None or cand.delta < best.delta:
+                    best = cand
+        if best is None:
+            raise ValueError(f"{m} has no admissible 2^n±δ representation")
+        return best
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        s = "+" if self.sign > 0 else "-"
+        return f"2^{self.n}{s}{self.delta} (= {self.m})"
+
+
+# ---------------------------------------------------------------------- codec
+def decode(bin_part, twit, mod: Modulus):
+    """Decode a (bin, twit) codeword to its canonical residue in [0, m).
+
+    Accepts Python ints or numpy arrays.
+    """
+    if isinstance(bin_part, np.ndarray) or isinstance(twit, np.ndarray):
+        v = bin_part.astype(np.int64) + np.asarray(twit, np.int64) * mod.twit_value
+        return np.mod(v, mod.m)
+    return (int(bin_part) + int(twit) * mod.twit_value) % mod.m
+
+
+def encode(value, mod: Modulus):
+    """Canonical encoding of a residue: twit=0 whenever bin fits in n bits.
+
+    For m = 2^n + δ the residues in [2^n, m) need the twit:
+    A = (A - δ) + δ with A - δ ∈ [2^n - δ, 2^n).  For m = 2^n - δ every
+    residue fits in n bits with twit=0.
+    """
+    if isinstance(value, np.ndarray):
+        value = np.mod(value.astype(np.int64), mod.m)
+        need_twit = value >= 2**mod.n
+        bin_part = np.where(need_twit, value - mod.twit_value, value)
+        return bin_part.astype(np.int64), need_twit.astype(np.int64)
+    value = int(value) % mod.m
+    if value < 2**mod.n:
+        return value, 0
+    # only reachable for sign=+1 (m > 2^n)
+    return value - mod.twit_value, 1
+
+
+def encode_all_forms(value: int, mod: Modulus) -> list[Tuple[int, int]]:
+    """Every valid (bin, twit) codeword that decodes to ``value``.
+
+    Used by exhaustive tests to check the redundancy claims of Section IV-A:
+    for 2^n - δ every residue has >= 1 forms and many have 2; for 2^n + δ only
+    a subset has dual representations.
+    """
+    value = value % mod.m
+    forms = []
+    for t in (0, 1):
+        # bin + t*s*δ ≡ value (mod m)  with bin in [0, 2^n)
+        base = (value - t * mod.twit_value) % mod.m
+        for k in range(0, 2):  # bin may exceed m but must fit n bits
+            b = base + k * mod.m
+            if 0 <= b < 2**mod.n:
+                forms.append((b, t))
+    return sorted(set(forms))
+
+
+@dataclasses.dataclass(frozen=True)
+class TwitOperand:
+    """A twit-encoded operand (scalar, used by the bit-faithful models)."""
+
+    bin: int
+    twit: int
+    mod: Modulus
+
+    def __post_init__(self):
+        if not (0 <= self.bin < 2**self.mod.n):
+            raise ValueError(f"bin {self.bin} out of n={self.mod.n} bits")
+        if self.twit not in (0, 1):
+            raise ValueError(f"twit must be 0/1, got {self.twit}")
+
+    @property
+    def value(self) -> int:
+        return decode(self.bin, self.twit, self.mod)
+
+    @classmethod
+    def from_value(cls, value: int, mod: Modulus) -> "TwitOperand":
+        b, t = encode(value, mod)
+        return cls(bin=b, twit=t, mod=mod)
+
+    def bit(self, i: int) -> int:
+        return (self.bin >> i) & 1
+
+
+@functools.lru_cache(maxsize=None)
+def all_codewords(mod: Modulus) -> tuple[TwitOperand, ...]:
+    """All 2^(n+1) codewords for exhaustive testing (cached)."""
+    out = []
+    for t in (0, 1):
+        for b in range(2**mod.n):
+            out.append(TwitOperand(bin=b, twit=t, mod=mod))
+    return tuple(out)
+
+
+def admissible_deltas(n: int) -> Iterable[int]:
+    """All admissible offsets for a channel width (paper: full generic range)."""
+    return range(0, 2 ** (n - 1))

@@ -1,0 +1,1 @@
+from .pipeline import batch_for_step, host_shard_batch  # noqa: F401

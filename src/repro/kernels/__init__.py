@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Kernels (each with a pure-jnp oracle in `ref.py`):
+  rns_matmul      — per-channel RNS matmul, deferred fold epilogue (the
+                    paper's multiplier organization at tile granularity)
+  rns_modmul      — elementwise modular multiply over residue channels
+  fold            — standalone Stage-④ squeeze/canonicalize
+  flash_attention — blocked online-softmax attention (causal/SWA/softcap)
+"""
+from . import ref  # noqa: F401
+from .ops import flash_attention, fold, rns_matmul, rns_modmul  # noqa: F401

@@ -1,0 +1,43 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Backend dispatch: on TPU the kernels compile natively (interpret=False);
+everywhere else (this CPU container, unit tests) they run in interpret mode,
+which executes the kernel body in Python for bit-exact validation against
+`ref.py`.  Callers can force either mode.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention as _flash_attention
+from .fold import fold as _fold
+from .rns_matmul import rns_matmul as _rns_matmul
+from .rns_modmul import rns_modmul as _rns_modmul
+
+__all__ = ["rns_matmul", "rns_modmul", "fold", "flash_attention", "ref"]
+
+
+def _interp(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def rns_matmul(a_res, b_res, moduli, *, interpret=None, **kw):
+    return _rns_matmul(a_res, b_res, tuple(int(m) for m in moduli),
+                       interpret=_interp(interpret), **kw)
+
+
+def rns_modmul(a_res, b_res, moduli, *, interpret=None, **kw):
+    return _rns_modmul(a_res, b_res, tuple(int(m) for m in moduli),
+                       interpret=_interp(interpret), **kw)
+
+
+def fold(x, moduli, bound, *, interpret=None, **kw):
+    return _fold(x, tuple(int(m) for m in moduli), int(bound),
+                 interpret=_interp(interpret), **kw)
+
+
+def flash_attention(q, k, v, *, interpret=None, **kw):
+    return _flash_attention(q, k, v, interpret=_interp(interpret), **kw)

@@ -1,0 +1,146 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` function is numerically *exact* (integer kernels) or
+allclose-equivalent (attention) to its kernel twin; the test suite sweeps
+shapes/dtypes and asserts agreement.  The integer oracles share the fold
+schedules of `repro.core.folding`, so kernel and oracle provably apply the
+same congruence ladder.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.folding import fold_schedule, max_subtracts, schedule_output_bound
+from repro.core.twit import Modulus, is_power_of_two
+
+__all__ = [
+    "channel_schedules",
+    "rns_matmul_ref",
+    "rns_modmul_ref",
+    "fold_ref",
+    "attention_ref",
+]
+
+
+@functools.lru_cache(maxsize=1024)
+def channel_schedules(moduli: Tuple[int, ...], bound: int,
+                      max_rungs: int = 6) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Per-channel fold ladders, padded to a common rung count.
+
+    Returns (sched, mods, n_sub):
+      sched: (C, R, 2) int32 — (shift, constant) rungs; pad rungs are
+             (30, 0-extended constant) no-ops (values are < 2^30 after any
+             real rung, so hi = v >> 30 = 0).
+      mods:  (C,) int32 moduli.
+      n_sub: conditional-subtract count covering every channel.
+    """
+    scheds = []
+    n_sub = 1
+    for m in moduli:
+        if is_power_of_two(m):
+            s = (int(np.log2(m)), 0)          # lo + hi·0 == v mod m, exact
+            scheds.append([s])
+            continue
+        mod = Modulus.from_value(m)
+        sc = list(fold_schedule(bound, mod, target_multiple=4,
+                                max_rungs=max_rungs))
+        n_sub = max(n_sub, max_subtracts(bound, sc, m))
+        scheds.append(sc)
+    R = max(len(s) for s in scheds)
+    pad = (30, 0)
+    # pad rung (30, 0): v -> (v & (2^30-1)) + (v>>30)*0; post-ladder values
+    # are < 4m < 2^30, so the mask keeps them intact and the hi term is 0.
+    arr = np.zeros((len(moduli), R, 2), dtype=np.int32)
+    for c, s in enumerate(scheds):
+        rows = list(s) + [pad] * (R - len(s))
+        arr[c] = np.asarray(rows, dtype=np.int32)
+    mods = np.asarray(moduli, dtype=np.int32)
+    return arr, mods, n_sub
+
+
+def _apply_ladder(x, sched_c, m, n_sub):
+    """Apply one channel's ladder + subtracts to an int32 array."""
+    R = sched_c.shape[0]
+    for r in range(R):
+        s = sched_c[r, 0]
+        c = sched_c[r, 1]
+        mask = jnp.left_shift(jnp.int32(1), s) - 1
+        x = jnp.bitwise_and(x, mask) + jnp.right_shift(x, s) * c
+    for _ in range(n_sub):
+        x = jnp.where(x >= m, x - m, x)
+    return x
+
+
+def rns_matmul_ref(a_res, b_res, moduli: Sequence[int]):
+    """Oracle for the RNS channel matmul.
+
+    a_res: (C, M, K) int8/int32 residues in [0, m_c)
+    b_res: (C, K, N) idem
+    returns (C, M, N) int32 canonical residues of the per-channel products.
+
+    The contraction accumulates *unreduced* in int32 (the carry-save analogue)
+    and folds once at the end — the paper's deferred-reduction organization.
+    """
+    moduli = tuple(int(m) for m in moduli)
+    K = a_res.shape[-1]
+    bound = int(K) * max((m - 1) ** 2 for m in moduli)
+    assert bound < 2**31, f"int32 accumulator overflow: K={K}"
+    sched, mods, n_sub = channel_schedules(moduli, bound)
+    acc = jnp.einsum("cmk,ckn->cmn", a_res.astype(jnp.int32),
+                     b_res.astype(jnp.int32))
+    outs = []
+    for c in range(len(moduli)):
+        outs.append(_apply_ladder(acc[c], sched[c], jnp.int32(moduli[c]), n_sub))
+    return jnp.stack(outs, axis=0)
+
+
+def rns_modmul_ref(a_res, b_res, moduli: Sequence[int]):
+    """Oracle for the elementwise residue multiply: (C, ...) → (C, ...)."""
+    moduli = tuple(int(m) for m in moduli)
+    bound = max((m - 1) ** 2 for m in moduli)
+    sched, mods, n_sub = channel_schedules(moduli, bound)
+    p = a_res.astype(jnp.int32) * b_res.astype(jnp.int32)
+    outs = []
+    for c in range(len(moduli)):
+        outs.append(_apply_ladder(p[c], sched[c], jnp.int32(moduli[c]), n_sub))
+    return jnp.stack(outs, axis=0)
+
+
+def fold_ref(x, moduli: Sequence[int], bound: int):
+    """Oracle for the standalone fold kernel: (C, ...) int32 → canonical."""
+    moduli = tuple(int(m) for m in moduli)
+    sched, mods, n_sub = channel_schedules(moduli, int(bound))
+    outs = []
+    for c in range(len(moduli)):
+        outs.append(_apply_ladder(x[c].astype(jnp.int32), sched[c],
+                                  jnp.int32(moduli[c]), n_sub))
+    return jnp.stack(outs, axis=0)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  softcap: float | None = None, scale: float | None = None):
+    """Oracle attention: (B, H, Sq, D), (B, H, Sk, D), (B, H, Sk, D).
+
+    Causal + optional sliding window + optional logit softcap — the exact
+    masking semantics the models use (gemma2/h2o-danube/hymba variants).
+    """
+    sq, sk = q.shape[-2], k.shape[-2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

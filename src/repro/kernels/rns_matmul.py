@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: per-channel RNS matmul with deferred fold epilogue.
+
+This is the TPU-native realization of the paper's multiplier organization at
+matmul-tile granularity (DESIGN.md §2):
+
+  Stage ② (modular partial products)  → int8×int8 MXU products of residue
+                                        tiles — already "small" operands, no
+                                        reduction logic in the inner loop;
+  Stage ③ (carry-save accumulation)   → int32 accumulator scratch in VMEM,
+                                        accumulated across the whole K grid
+                                        dimension with *zero* per-MAC
+                                        reduction (the carry-save analogue);
+  Stage ④ (squeezing + final add)     → the fold-ladder epilogue, executed
+                                        once per output tile on the last K
+                                        step: a static chain of
+                                        shift/mask/multiply-add rungs (the
+                                        congruence 2^s ≡ |2^s|_m) followed by
+                                        a bounded number of conditional
+                                        subtracts.  One "carry-propagate
+                                        moment" per tile — the paper's
+                                        single-CPA principle.
+
+Layout: operands are (C, M, K) / (C, K, N) int8 residues; the channel axis C
+is the outermost grid dimension so each modulus channel runs independently
+(the paper's modular-channel parallelism).  Fold ladders are per-channel
+(shift, constant) tables streamed as a tiny int32 input.
+
+Grid: (C, M/bm, N/bn, K/bk); K is the innermost, sequential ("arbitrary")
+dimension; M/N/C are parallel.  VMEM per step ≈ bm·bk + bk·bn (int8)
++ bm·bn·4 (acc) — 128×512 blocks ≈ 192 KiB, comfortably inside the ~16 MiB
+v5e VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import channel_schedules
+
+__all__ = ["rns_matmul"]
+
+
+def _kernel(sched_ref, mod_ref, a_ref, b_ref, o_ref, acc_ref, *,
+            nk: int, n_sub: int, signed_a: bool):
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0]                       # (bm, bk) int8 residues (or raw int8)
+    b = b_ref[0]                       # (bk, bn)
+    # MXU int8 contraction with int32 accumulation — Stage ②+③ fused; no
+    # reduction of any kind inside the K loop.
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(k_step == nk - 1)
+    def _epilogue():
+        x = acc_ref[...]
+        sched = sched_ref[0]           # (R, 2) int32 rungs for this channel
+        m = mod_ref[0]
+        if signed_a:
+            # broadcast-operand mode: a is *raw signed* int8 (no forward
+            # conversion) — fold |acc| and fix the sign: (−v) mod m = m − r
+            neg = x < 0
+            x = jnp.abs(x)
+        for r in range(sched.shape[0]):   # static unroll — Stage ④ ladder
+            s = sched[r, 0]
+            c = sched[r, 1]
+            mask = jnp.left_shift(jnp.int32(1), s) - 1
+            x = jnp.bitwise_and(x, mask) + jnp.right_shift(x, s) * c
+        for _ in range(n_sub):             # bounded canonicalization
+            x = jnp.where(x >= m, x - m, x)
+        if signed_a:
+            x = jnp.where(neg & (x > 0), m - x, x)
+        o_ref[...] = x[None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "moduli", "block_m", "block_n", "block_k", "interpret", "signed_a"))
+def rns_matmul(a_res, b_res, moduli: tuple, *,
+               block_m: int = 128, block_n: int = 128, block_k: int = 512,
+               interpret: bool = True, signed_a: bool = False):
+    """|A·B|_{m_c} for every channel c.
+
+    a_res: (C, M, K) int8 residues; b_res: (C, K, N) int8 residues.
+    Returns (C, M, N) int32 canonical residues.
+
+    signed_a: broadcast-operand mode (EXPERIMENTS.md §Perf C0) — `a_res`
+    holds the *raw signed* int8 activations, identical across channels (no
+    forward conversion; Σx·w ≡ Σx·|w|_m); the epilogue folds |acc| and
+    fixes the sign.
+
+    M/N/K are padded to block multiples (zero residues contribute zero to the
+    modular sum, so padding is exact); the result is sliced back.
+    """
+    C, M, K = a_res.shape
+    C2, K2, N = b_res.shape
+    assert K == K2 and C2 == C, (a_res.shape, b_res.shape)
+    if signed_a:
+        bound = int(K) * 127 * max(int(m) - 1 for m in moduli)
+    else:
+        bound = int(K) * max((int(m) - 1) ** 2 for m in moduli)
+    if bound >= 2**31:
+        raise ValueError(f"int32 accumulator overflow: K={K}, moduli={moduli}")
+    sched_np, mods_np, n_sub = channel_schedules(tuple(int(m) for m in moduli),
+                                                 bound)
+    sched = jnp.asarray(sched_np)
+    mods = jnp.asarray(mods_np)
+
+    bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        a_res = jnp.pad(a_res, ((0, 0), (0, pm), (0, pk)))
+    if pk or pn:
+        b_res = jnp.pad(b_res, ((0, 0), (0, pk), (0, pn)))
+    Mp, Np, Kp = M + pm, N + pn, K + pk
+    nk = Kp // bk
+    grid = (C, Mp // bm, Np // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, n_sub=n_sub, signed_a=signed_a),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, sched.shape[1], 2), lambda c, i, j, k: (c, 0, 0)),
+            pl.BlockSpec((1,), lambda c, i, j, k: (c,)),
+            pl.BlockSpec((1, bm, bk), lambda c, i, j, k: (c, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda c, i, j, k: (c, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda c, i, j, k: (c, i, j)),
+        out_shape=jax.ShapeDtypeStruct((C, Mp, Np), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")) if not interpret else None,
+        interpret=interpret,
+    )(sched, mods, a_res, b_res)
+    return out[:, :M, :N]

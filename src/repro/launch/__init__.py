@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, sharding policy, dry-run, roofline, CLI."""

@@ -1,0 +1,259 @@
+"""Analytic per-device cost model: flops / HBM bytes / ICI wire bytes.
+
+Why this exists: XLA's HloCostAnalysis counts while-loop bodies **once**
+(verified in EXPERIMENTS.md §Dry-run methodology) — with scan-over-layers,
+blocked attention and SSD chunk scans, the raw `compiled.cost_analysis()`
+numbers undercount looped work by up to the layer count.  The dry-run
+records both: the raw HLO numbers (evidence, structure) and this analytic
+model (loop-correct totals).  The analytic flop formulas are exact for the
+matmul-dominated terms (validated against HLO cost_analysis on *unrolled*
+configs in tests/test_costs.py); HBM and ICI terms are standard engineering
+estimates with the formulas spelled out below.
+
+Conventions: 2 flops per MAC; everything is *per device*; bf16 activations
+and params; fp32 logits/optimizer.  Sharding mirror of launch/sharding.py:
+batch over dp axes (when divisible), features/heads/experts/sequence over
+the 16-way "model" axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["analytic_cost", "CostReport"]
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float                 # per-device, bf16-equivalent matmul flops
+    flops_int8: float            # per-device int8 MXU ops (rns_int8 backend)
+    hbm_bytes: float             # per-device HBM traffic
+    ici_bytes: float             # per-device ICI wire bytes
+    breakdown: Dict[str, float]
+
+    def as_dict(self):
+        return {"flops": self.flops, "flops_int8": self.flops_int8,
+                "hbm_bytes": self.hbm_bytes, "ici_bytes": self.ici_bytes,
+                "breakdown": self.breakdown}
+
+
+def _causal_context_sum(S: int, W: int) -> float:
+    """Σ_t min(t+1, W) — total key positions attended over a causal
+    (optionally windowed) sequence of length S."""
+    W = min(W, S)
+    return W * (W + 1) / 2.0 + (S - W) * W
+
+
+def analytic_cost(cfg: ModelConfig, shape: ShapeConfig, *,
+                  n_pods: int = 1, data: int = 16, model: int = 16,
+                  mode: str = "tp") -> CostReport:
+    S = shape.seq_len
+    B = shape.global_batch
+    mp = model
+    dp = n_pods * data
+    chips = dp * mp
+    if mode == "dp":
+        # pure data parallelism: the model axis joins the batch axes; no TP
+        dp, mp = dp * mp, 1
+    # long_500k's B=1 cannot data-parallelize: dp idles (roofline shows it)
+    dp_eff = dp if B % dp == 0 else 1
+    eff = dp_eff * mp
+
+    decode = shape.kind == "decode"
+    T = B * (1 if decode else S)              # tokens processed this step
+    d, f, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    glu_m = 3 if cfg.glu else 2
+    bk: Dict[str, float] = {}
+
+    # ---------------- flops (global, matmul terms; /eff at the end) --------
+    fl = 0.0
+    # embedding lookup ~0; LM head:
+    head = 2.0 * T * d * V
+    fl += head
+    bk["flops_head"] = head
+
+    attn_ctx = 0.0
+    for layer in range(cfg.num_layers):
+        is_moe = cfg.mlp_kind(layer) == "moe"
+        kind = ("hybrid" if cfg.hybrid
+                else "ssm" if (cfg.ssm and cfg.attention == "none") else "attn")
+        if kind in ("attn", "hybrid"):
+            W = cfg.window_for_layer(layer, S if not decode else S)
+            fl += 2.0 * T * d * (H + 2 * Hk) * dh          # qkv
+            fl += 2.0 * T * (H * dh) * d                   # o proj
+            if decode:
+                ctx = B * min(W, S) * 1.0                  # keys visited
+            else:
+                ctx = B * _causal_context_sum(S, W)
+            attn_ctx += 4.0 * ctx * H * dh                 # scores + p·v
+        if kind in ("ssm", "hybrid"):
+            di, N, Hs, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, \
+                cfg.ssm_head_dim
+            fl += 2.0 * T * d * (2 * di + 2 * N + Hs)      # in_proj
+            fl += 2.0 * T * di * d                         # out_proj
+            fl += 2.0 * T * cfg.ssm_conv * (di + 2 * N)    # depthwise conv
+            Q = 1 if decode else min(cfg.ssm_chunk, S)
+            # SSD dual form: cb (Q·N) + weighted x (Q·H·P) per token intra,
+            # plus ~3 state-sized ops per token inter/update
+            fl += 2.0 * T * Q * N + 2.0 * T * Q * Hs * P
+            fl += 6.0 * T * Hs * N * P
+        if is_moe:
+            fe = cfg.moe_d_ff or f
+            fl += 2.0 * T * d * cfg.num_experts            # router
+            fl += 2.0 * (T * cfg.top_k) * glu_m * d * fe   # routed experts
+            # routing bookkeeping: cumsum/one-hot over (T·K, E) + the
+            # scatter/gather dispatch moves (XLA counts these as flops)
+            fl += 6.0 * T * cfg.top_k * cfg.num_experts \
+                + 4.0 * T * cfg.top_k * d
+            if cfg.shared_expert:
+                fl += 2.0 * T * glu_m * d * fe
+        elif f > 0:
+            fl += 2.0 * T * glu_m * d * f
+    fl += attn_ctx
+    bk["flops_attn_ctx"] = attn_ctx
+
+    # training multiplier: blocks fwd + remat-fwd + bwd(2×) = 4× with full
+    # remat, 3× without (remat_policy "none"); head (outside the scan) 3×
+    if shape.kind == "train":
+        remat_on = cfg.remat and cfg.remat_policy != "none"
+        blk_mult = 4.0 if remat_on else 3.0
+        fl = blk_mult * (fl - head) + 3.0 * head
+    flops_dev = fl / eff
+    bk["flops_global"] = fl
+
+    # int8 path: the rns_int8 backend runs every dense matmul (not attention
+    # scores / SSD) C× over residue channels as int8 MXU ops.  For training,
+    # only the forward (+ remat recompute) is RNS — the straight-through
+    # backward is dense bf16 (custom_vjp), i.e. 2 of the 4 fwd-equivalents
+    # with full remat, 1 of 3 without.
+    flops_int8 = 0.0
+    if cfg.linear_backend == "rns_int8":
+        from repro.core.rns_linear import _basis_for_k
+        C = _basis_for_k(d).k              # channel count (K≈d dominates)
+        dense = flops_dev - (attn_ctx / eff)
+        if shape.kind == "train":
+            remat_on = cfg.remat and cfg.remat_policy != "none"
+            fwd_frac = (2.0 / 4.0) if remat_on else (1.0 / 3.0)
+        else:
+            fwd_frac = 1.0
+        flops_int8 = dense * fwd_frac * C
+        flops_dev = attn_ctx / eff + dense * (1.0 - fwd_frac)
+        bk["rns_channels"] = C
+
+    # ---------------- HBM bytes (per device) -------------------------------
+    from repro.models.transformer import count_params
+    Pcnt = count_params(cfg)
+    p_shard = chips if mode == "fsdp_tp" else mp
+    P_dev = Pcnt / p_shard
+    B_dev = B / dp_eff
+    T_dev = T / dp_eff
+
+    if shape.kind == "train":
+        # params: read fwd + remat + bwd (3×bf16) ; grads write+read (fp32);
+        # AdamW m,v read+write + param read/write (fp32 master semantics)
+        remat_on = cfg.remat and cfg.remat_policy != "none"
+        opt_mult = 24 if cfg.optimizer == "adamw" else 6
+        w_bytes = P_dev * ((3 if remat_on else 2) * BF16 + 8 + opt_mult)
+        act_per_layer = T_dev * (4 * d + (glu_m * f + 3 * H * dh) / mp) * BF16
+        act_bytes = cfg.num_layers * act_per_layer * (4 if remat_on else 3)
+        score_bytes = 0.0
+        if cfg.attn_impl != "flash_kernel":   # flash: tiles stay in VMEM
+            for layer in range(cfg.num_layers):
+                if cfg.attention != "none":
+                    W = cfg.window_for_layer(layer, S)
+                    score_bytes += (B_dev * _causal_context_sum(S, W)
+                                    * (H / mp) * F32 * 3)
+        logits_bytes = 3 * T_dev * (V / mp) * F32
+        hbm = w_bytes + act_bytes + score_bytes + logits_bytes
+        bk.update(hbm_weights=w_bytes, hbm_acts=act_bytes,
+                  hbm_scores=score_bytes, hbm_logits=logits_bytes)
+    elif shape.kind == "prefill":
+        w_bytes = P_dev * BF16
+        act_per_layer = T_dev * (4 * d + (glu_m * f + 3 * H * dh) / mp) * BF16
+        act_bytes = cfg.num_layers * act_per_layer * 2
+        score_bytes = 0.0
+        if cfg.attn_impl != "flash_kernel":
+            for layer in range(cfg.num_layers):
+                if cfg.attention != "none":
+                    W = cfg.window_for_layer(layer, S)
+                    score_bytes += (B_dev * _causal_context_sum(S, W)
+                                    * (H / mp) * F32 * 2)
+        logits_bytes = T_dev * (V / mp) * F32
+        hbm = w_bytes + act_bytes + score_bytes + logits_bytes
+        bk.update(hbm_weights=w_bytes, hbm_acts=act_bytes,
+                  hbm_scores=score_bytes)
+    else:  # decode: weights once + cache traffic — the classic bound
+        if cfg.moe:
+            # only active experts' weights stream per token (per device)
+            from repro.models.transformer import active_params
+            w_bytes = active_params(cfg) / p_shard * BF16 * max(1.0, B_dev)
+        else:
+            w_bytes = P_dev * BF16
+        cache_bytes = 0.0
+        for layer in range(cfg.num_layers):
+            kind = ("hybrid" if cfg.hybrid
+                    else "ssm" if (cfg.ssm and cfg.attention == "none")
+                    else "attn")
+            if kind in ("attn", "hybrid"):
+                W = min(cfg.window_for_layer(layer, S), S)
+                cache_bytes += B_dev * W / mp * Hk * dh * 2 * BF16
+            if kind in ("ssm", "hybrid"):
+                cache_bytes += (B_dev * cfg.ssm_heads * cfg.ssm_state
+                                * cfg.ssm_head_dim / mp * F32 * 2)
+        logits_bytes = B_dev * (V / mp) * F32
+        hbm = w_bytes + cache_bytes + logits_bytes
+        bk.update(hbm_weights=w_bytes, hbm_cache=cache_bytes)
+
+    # ---------------- ICI wire bytes (per device) ---------------------------
+    ar = lambda b, n: 2.0 * (n - 1) / n * b if n > 1 else 0.0
+    ag = lambda b, n: (n - 1) / n * b if n > 1 else 0.0
+    act_b = T_dev * d * BF16
+    ici = 0.0
+    # TP activation all-reduces: 2 per layer fwd (attn-out, mlp-out; hybrid 3)
+    n_ar_layer = 3 if cfg.hybrid else (1 if (cfg.ssm and cfg.attention ==
+                                             "none") else 2)
+    if shape.kind == "train":
+        # fwd + bwd, + remat recompute unless the AR outputs are saved
+        # (remat_policy="save_ar" keeps them ⇒ recompute repeats no ARs)
+        full_remat = cfg.remat and cfg.remat_policy == "full"
+        fwd_mult = 3.0 if full_remat else 2.0
+    else:
+        fwd_mult = 1.0
+    ici += cfg.num_layers * n_ar_layer * fwd_mult * ar(act_b, mp)
+    bk["ici_tp_ar"] = ici
+    if cfg.moe:
+        # expert dispatch/return over the EP axis (a2a-equivalent volume)
+        n_moe = sum(1 for l in range(cfg.num_layers)
+                    if cfg.mlp_kind(l) == "moe")
+        moe_b = 2.0 * n_moe * fwd_mult * (T_dev * cfg.top_k * d * BF16) \
+            * (mp - 1) / mp
+        ici += moe_b
+        bk["ici_moe_a2a"] = moe_b
+    if shape.kind == "train":
+        grad_bytes_per_param = 1.0 if cfg.grad_compression else F32
+        grad_shard_bytes = Pcnt / mp * grad_bytes_per_param
+        if mode == "fsdp_tp":
+            # ZeRO-3: all-gather params (fwd+bwd) + reduce-scatter grads
+            sync = 2 * ag(Pcnt / mp * BF16, dp) + ag(grad_shard_bytes, dp)
+        else:
+            sync = ar(grad_shard_bytes, dp)
+        ici += sync
+        bk["ici_grad_sync"] = sync
+    if decode:
+        # sequence-sharded KV softmax stats + output partial-sum all-reduces
+        n_attn = sum(1 for l in range(cfg.num_layers)
+                     if (not cfg.ssm or cfg.hybrid))
+        dec_b = n_attn * ar(B_dev * H * (dh + 2) * F32, mp)
+        ici += dec_b
+        bk["ici_decode_softmax"] = dec_b
+    # loss/logits stats (train): lse all-reduce, tiny
+    ici += ar(T_dev * F32, mp) if shape.kind == "train" else 0.0
+
+    return CostReport(flops=flops_dev, flops_int8=flops_int8,
+                      hbm_bytes=hbm, ici_bytes=ici, breakdown=bk)

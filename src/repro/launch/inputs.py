@@ -1,0 +1,44 @@
+"""Abstract input specs for every (arch × shape) dry-run cell.
+
+ShapeDtypeStruct stand-ins only — weak-type-correct, shardable, zero device
+allocation.  `[audio]`/`[vlm]` archs get precomputed frame/patch embeddings
+(the assignment's frontend stub); everything else gets token ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+
+__all__ = ["input_specs", "abstract_params", "abstract_cache"]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one cell (tokens/embeds [+ labels for train])."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        s_in = 1                     # one new token against an S-sized cache
+    else:
+        s_in = S
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "embeddings":
+        out["embeds"] = jax.ShapeDtypeStruct((B, s_in, cfg.d_model),
+                                             jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, s_in), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: T.make_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, smax: int):
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, smax))

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches JAX device state — the dry-run driver must set
+--xla_force_host_platform_device_count *before* the first jax call.
+
+Topology: TPU v5e pods of 16×16 = 256 chips; the multi-pod mesh adds a
+leading "pod" axis (2 pods = 512 chips).  Axis roles:
+  pod   — slowest (DCN-connected) dimension: pure data parallelism.
+  data  — intra-pod data parallel / FSDP shard axis.
+  model — tensor/expert/sequence parallel axis (16-way).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "dp_axes", "DP_AXES",
+           "MODEL_AXIS"]
+
+MODEL_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axis names of a mesh (('pod',)+('data',) or ('data',))."""
+    names = tuple(mesh.axis_names)
+    return tuple(a for a in names if a != MODEL_AXIS)
+
+
+DP_AXES = ("pod", "data")

@@ -1,0 +1,239 @@
+"""Roofline analysis: three terms per (arch × shape × mesh) from dry-run HLO.
+
+    compute    = HLO_FLOPs/device ÷ 197 TFLOP/s    (v5e bf16 MXU peak)
+    memory     = HLO bytes/device ÷ 819 GB/s       (v5e HBM bandwidth)
+    collective = ICI wire bytes/device ÷ 50 GB/s   (per-link ICI bandwidth)
+
+HLO_FLOPs and bytes come from compiled.cost_analysis() of the partitioned
+(per-device) module.  Collective wire bytes are parsed from the compiled HLO
+text with the standard ring-algorithm cost model per op:
+
+    all-reduce      2·(n−1)/n · bytes        (reduce-scatter + all-gather)
+    all-gather        (n−1)/n · bytes(output)
+    reduce-scatter    (n−1)   · bytes(output)   (= (n−1)/n · input)
+    all-to-all        (n−1)/n · bytes
+    collective-permute        1 · bytes
+
+n = replica-group size parsed per op.  MODEL_FLOPS uses 6·N·D (train) /
+2·N·D (prefill) / 2·N_active·B (decode); the ratio MODEL_FLOPS/HLO_FLOPS
+exposes remat recompute and padding/dispatch waste.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+PEAK_INT8_OPS = 394e12       # int8 MXU assumed 2× bf16 (documented assumption)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_]+\[[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)       # replica_groups=[ngroups,size]
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return default
+
+
+_COMP_HDR_RE = re.compile(r"^(%?[\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$",
+                          re.M)
+_WHILE_BODY_RE = re.compile(r"body=([%\w.\-]+)")
+
+
+def _while_body_spans(hlo_text: str):
+    """Character spans of computations that are while-loop bodies."""
+    bodies = set(m.group(1).lstrip("%")
+                 for m in _WHILE_BODY_RE.finditer(hlo_text))
+    spans = []
+    headers = list(_COMP_HDR_RE.finditer(hlo_text))
+    for i, h in enumerate(headers):
+        name = h.group(1).lstrip("%")
+        end = headers[i + 1].start() if i + 1 < len(headers) else len(hlo_text)
+        if name in bodies:
+            spans.append((h.start(), end))
+    return spans
+
+
+def collective_bytes(hlo_text: str, default_group: int = 2,
+                     loop_trip: int = 1) -> Dict[str, float]:
+    """Per-device ICI wire bytes by collective type (ring cost model).
+
+    '-done' halves of async pairs are skipped (counted at '-start').
+
+    loop_trip: XLA's HLO text contains each while-loop body once; collectives
+    inside a while body execute `trip` times (scan-over-layers ⇒ n_blocks).
+    Ops found inside while-body computations are multiplied by loop_trip —
+    an n_blocks approximation for every loop level, documented in
+    EXPERIMENTS.md (nested inner scans rarely contain collectives).
+    """
+    out: Dict[str, float] = {}
+    raw: Dict[str, float] = {}
+    spans = _while_body_spans(hlo_text) if loop_trip > 1 else []
+
+    def _mult(pos: int) -> int:
+        for s, e in spans:
+            if s <= pos < e:
+                return loop_trip
+        return 1
+
+    for m in _COLL_RE.finditer(hlo_text):
+        sig, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        b = _shape_bytes(sig)
+        n = _group_size(line, default_group)
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * b
+        elif op == "all-gather":
+            wire = (n - 1) / n * b
+        elif op == "reduce-scatter":
+            wire = float(n - 1) * b
+        elif op == "all-to-all":
+            wire = (n - 1) / n * b
+        else:                                  # collective-permute
+            wire = float(b)
+        wire *= _mult(m.start())
+        out[op] = out.get(op, 0.0) + wire
+        raw[op + "_output_bytes"] = raw.get(op + "_output_bytes", 0.0) + b
+    out.update(raw)
+    return out
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_per_dev: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.hlo_flops_per_dev * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-at-peak time ÷ bound time — the score we hillclimb."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+
+def analyze(record: dict) -> Roofline:
+    """Roofline terms for one dry-run record.
+
+    Primary source: the loop-corrected analytic model (record["analytic"],
+    from launch/costs.py) — XLA cost_analysis counts while bodies once, so
+    the raw HLO numbers undercount scanned work (kept as hlo_* evidence).
+    Falls back to raw HLO numbers when no analytic record exists.
+    """
+    chips = record["n_devices"]
+    hlo_flops = record.get("cost", {}).get("flops", 0.0)
+    an = record.get("analytic")
+    if an:
+        flops_s = (an["flops"] / PEAK_FLOPS
+                   + an.get("flops_int8", 0.0) / PEAK_INT8_OPS)
+        mem_s = an["hbm_bytes"] / HBM_BW
+        coll_s = an["ici_bytes"] / ICI_BW
+        flops_per_dev = an["flops"] + an.get("flops_int8", 0.0)
+    else:
+        flops_s = hlo_flops / PEAK_FLOPS
+        mem_s = record.get("cost", {}).get("bytes accessed", 0.0) / HBM_BW
+        coll = sum(v for k, v in record.get("collectives", {}).items()
+                   if not k.endswith("_output_bytes"))
+        coll_s = coll / ICI_BW
+        flops_per_dev = hlo_flops
+    return Roofline(
+        compute_s=flops_s,
+        memory_s=mem_s,
+        collective_s=coll_s,
+        model_flops=record.get("model_flops", 0.0),
+        hlo_flops_per_dev=flops_per_dev,
+        chips=chips,
+    )
+
+
+def model_flops_for(cfg, shape, n_params: int, n_active: int) -> float:
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_params * tokens if not cfg.moe \
+            else 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        n = n_active if cfg.moe else n_params
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    n = n_active if cfg.moe else n_params
+    return 2.0 * n * shape.global_batch
+
+
+def format_table(records: List[dict]) -> str:
+    rows = ["| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+            " | dominant | MODEL/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"SKIP ({r.get('reason','')}) | | | | | |")
+            continue
+        a = analyze(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {a.compute_s:.3e} | {a.memory_s:.3e} | {a.collective_s:.3e} "
+            f"| **{a.dominant}** | {a.useful_ratio:.2f} "
+            f"| {a.roofline_fraction:.3f} |")
+    return "\n".join(rows)
+
+
+def load_records(path: str) -> List[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

@@ -1,0 +1,8 @@
+"""Model definitions: composable decoder-only LM family.
+
+All ten assigned architectures are instances of one scan-over-layers
+transformer (`transformer.py`) whose blocks are parameterized by
+:class:`repro.configs.base.ModelConfig`: GQA attention (full/SWA/local-global,
+RoPE/sinusoidal, softcap), dense/GLU or MoE MLPs, Mamba2 SSD mixers, and
+Hymba-style parallel attention+SSM heads.
+"""

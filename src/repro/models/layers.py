@@ -1,0 +1,206 @@
+"""Shared layers: norms, linear backends, positions, GQA attention, caches.
+
+Attention comes in three execution strategies:
+  * direct     — materialize (…, Sq, Sk) scores; short sequences & decode.
+  * blocked    — lax.scan over key blocks with online softmax (a jnp "flash"):
+                 bounded memory at 32k+ prefill, the shape the Pallas kernel
+                 (`kernels/flash_attention.py`) implements natively on TPU.
+The choice is automatic by sequence length (cfg.attn_block_kv).
+
+Linear layers dispatch on cfg.linear_backend:
+  * "bf16"     — plain dot in the param dtype.
+  * "rns_int8" — the paper's RNS integer matmul (`core/rns_linear.rns_dense`):
+                 exact int8 product through 2^5±δ residue channels with
+                 deferred folding, straight-through gradients.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rns_linear import rns_dense
+
+__all__ = [
+    "Dense", "rms_norm", "make_dense_params", "linear",
+    "rope", "apply_rope", "sinusoidal",
+    "attention", "update_cache_full", "update_cache_ring",
+]
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ----------------------------------------------------------------- params ---
+def make_dense_params(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def linear(x, w, backend: str = "bf16"):
+    """x: (..., d_in) @ w: (d_in, d_out) under the selected backend."""
+    if backend == "rns_int8":
+        shp = x.shape
+        y = rns_dense(x.reshape(-1, shp[-1]), w)
+        return y.reshape(*shp[:-1], w.shape[-1])
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- positions ---
+def rope(positions, head_dim: int, theta: float = 10000.0):
+    """positions: (...,) int32 → (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (S, D//2) or (B, S, D//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+def sinusoidal(positions, d_model: int):
+    """Classic transformer sinusoidal embeddings (musicgen)."""
+    half = d_model // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half, dtype=np.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -------------------------------------------------------------- attention ---
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, window):
+    """Causal + sliding-window mask from absolute positions (int32)."""
+    m = kpos[None, :] <= qpos[:, None]
+    m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+def _scores(q, k, softcap, scale):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def attention(q, k, v, qpos, kpos, *, window: int | jnp.ndarray,
+              softcap: Optional[float] = None, block_kv: int = 1024,
+              kv_valid_from: int = 0):
+    """GQA attention over absolute positions.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hk, D) with Hq % Hk == 0.
+    qpos: (Sq,) int32 absolute positions of the queries;
+    kpos: (Sk,) int32 absolute positions of keys (−1 ⇒ invalid slot).
+    window: python int or scalar int32 array (scan-over-layers passes the
+    per-layer window as data).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    groups = Hq // Hk
+    scale = 1.0 / np.sqrt(D)
+    kk = jnp.repeat(k, groups, axis=2)
+    vv = jnp.repeat(v, groups, axis=2)
+
+    valid_k = kpos >= kv_valid_from
+
+    if Sk <= 2 * block_kv or Sq == 1:
+        s = _scores(q, kk, softcap, scale)
+        m = _mask(qpos, kpos, window) & valid_k[None, :]
+        s = jnp.where(m[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), vv)
+
+    # blocked online softmax over key blocks (jnp flash)
+    nb = Sk // block_kv
+    rem = Sk - nb * block_kv
+    kb = kk[:, :nb * block_kv].reshape(B, nb, block_kv, Hq, D)
+    vb = vv[:, :nb * block_kv].reshape(B, nb, block_kv, Hq, D)
+    pb = kpos[:nb * block_kv].reshape(nb, block_kv)
+    vld = valid_k[:nb * block_kv].reshape(nb, block_kv)
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        kblk, vblk, kp, vl = xs
+        s = _scores(q, kblk, softcap, scale)
+        msk = _mask(qpos, kp, window) & vl[None, :]
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        # acc: (B, Sq, Hq, D); alpha: (B, Hq, Sq, 1) → align
+        a = alpha[..., 0].transpose(0, 2, 1)[..., None]          # (B,Sq,Hq,1)
+        acc = acc * a + jnp.einsum("bhqk,bkhd->bqhd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hq, Sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq, 1), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hq, D), jnp.float32)
+    (m_run, l_run, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), pb, vld))
+    if rem:
+        s = _scores(q, kk[:, nb * block_kv:], softcap, scale)
+        msk = _mask(qpos, kpos[nb * block_kv:], window) & valid_k[None, nb * block_kv:]
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_run - m_new)
+        l_run = l_run * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        a = alpha[..., 0].transpose(0, 2, 1)[..., None]
+        acc = acc * a + jnp.einsum("bhqk,bkhd->bqhd", p, vv[:, nb * block_kv:].astype(jnp.float32))
+        m_run = m_new
+    l = l_run[..., 0].transpose(0, 2, 1)[..., None]              # (B,Sq,Hq,1)
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l).astype(v.dtype)
+
+
+# ------------------------------------------------------------------ caches --
+def update_cache_full(cache_k, cache_v, k, v, pos):
+    """Insert one step (B, 1, Hk, D) at absolute position `pos`."""
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, pos, 0, 0))
+    return ck, cv
+
+
+def update_cache_ring(cache_k, cache_v, cache_pos, k, v, pos):
+    """Ring-buffer insert: slot = pos mod W; positions tracked in cache_pos.
+
+    The bounded-cache realization of sliding-window attention: memory is
+    O(window), not O(sequence) — what makes 500k-token decode feasible for
+    the SWA/hybrid architectures.
+    """
+    W = cache_k.shape[1]
+    slot = jnp.mod(pos, W)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, slot, 0, 0))
+    cp = jax.lax.dynamic_update_slice(cache_pos, pos[None].astype(jnp.int32),
+                                      (slot,))
+    return ck, cv, cp

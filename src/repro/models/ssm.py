@@ -1,0 +1,166 @@
+"""Mamba2 mixer: SSD (state-space duality) — chunked dual form + recurrence.
+
+Implements the SSD layer of Dao & Gu (arXiv:2405.21060) as used by the
+mamba2-1.3b and hymba-1.5b assignments:
+
+  train/prefill — *chunked dual form*: the sequence is split into chunks of
+    length Q; within a chunk the output is a masked (decay-weighted) attention
+    -like matmul (MXU-friendly); across chunks a small recurrence over the
+    per-chunk states (H, P, N) runs in a lax.scan.  Complexity O(S·Q) intra +
+    O(S/Q) scan — sub-quadratic, the reason mamba2/hymba run the long_500k
+    shape.
+
+  decode — O(1) state recurrence per token:
+    S_t = decay_t · S_{t−1} + dt_t·B_t ⊗ x_t ;  y_t = C_t · S_t + D ∘ x_t.
+
+Single B/C group (G=1) broadcast over heads, depthwise causal conv (k=4) on
+(x, B, C) inputs, gated output norm — the standard mamba2 block shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import make_dense_params, rms_norm
+
+__all__ = ["make_ssm_params", "ssm_apply", "ssm_decode_step", "init_ssm_cache"]
+
+
+def make_ssm_params(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N                       # x plus B and C streams
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj emits [z (gate), x, B, C, dt]
+        "in_proj": make_dense_params(ks[0], d, 2 * di + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": make_dense_params(ks[2], di, d, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * N]
+    dt = proj[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def _conv(xBC, w, b, state=None):
+    """Depthwise causal conv along S.  xBC: (B, S, C).  state: (B, k-1, C)."""
+    k = w.shape[0]
+    if state is not None:
+        xBC = jnp.concatenate([state.astype(xBC.dtype), xBC], axis=1)
+        pad = 0
+    else:
+        pad = k - 1
+    if pad:
+        xBC = jnp.pad(xBC, ((0, 0), (pad, 0), (0, 0)))
+    # windows: out[t] = sum_j w[j] * x[t+j]  over the k-length history
+    out = sum(xBC[:, j:xBC.shape[1] - (k - 1 - j)] * w[j] for j in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _gates(cfg, params, dt):
+    A = -jnp.exp(params["A_log"])                      # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    return dt, dt * A                                  # (B,S,H) each
+
+
+def ssm_apply(params, x, cfg):
+    """Chunked SSD forward.  x: (B, S, d_model) → (B, S, d_model)."""
+    B, S, _ = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, f"seq {S} must be divisible by ssm chunk {Q}"
+    nC = S // Q
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC = _conv(xBC, params["conv_w"], params["conv_b"])
+    xi = xBC[..., :cfg.d_inner].reshape(B, S, H, P)
+    Bv = xBC[..., cfg.d_inner:cfg.d_inner + N]                  # (B,S,N)
+    Cv = xBC[..., cfg.d_inner + N:]                             # (B,S,N)
+    dt, dA = _gates(cfg, params, dt)                            # (B,S,H)
+
+    # chunk views, chunk axis leading for the scan
+    xc = xi.reshape(B, nC, Q, H, P).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    Bc = Bv.reshape(B, nC, Q, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cc = Cv.reshape(B, nC, Q, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    dtc = dt.reshape(B, nC, Q, H).transpose(1, 0, 2, 3)
+    dAc = dA.reshape(B, nC, Q, H).transpose(1, 0, 2, 3)
+    tril = np.tril(np.ones((Q, Q), np.bool_))
+
+    def chunk_step(s_prev, xs):
+        """One chunk: intra-chunk dual form + inter-chunk state pass.
+
+        The (B, Q, Q, H) decay tensor lives only inside this scan step —
+        bounded working set, the jnp shape of the blocked TPU kernel.
+        """
+        xq, Bq, Cq, dtq, dAq = xs
+        cum = jnp.cumsum(dAq, axis=1)                           # (B,Q,H)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Q,Q,H)
+        decay = jnp.where(tril[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bqn,btn->bqt", Cq, Bq)                 # (B,Q,Q)
+        w = decay * cb[..., None] * dtq[:, None, :, :]          # (B,Q,Q,H)
+        y = jnp.einsum("bqth,bthp->bqhp", w, xq)
+        # inter-chunk: contribution of the incoming state
+        y = y + jnp.einsum("bqn,bqh,bhnp->bqhp", Cq, jnp.exp(cum), s_prev)
+        # state update for the next chunk
+        tail = jnp.exp(cum[:, -1:, :] - cum)                    # (B,Q,H)
+        upd = jnp.einsum("bth,btn,bthp->bhnp", tail * dtq, Bq, xq)
+        s_new = s_prev * jnp.exp(cum[:, -1, :])[..., None, None] + upd
+        return s_new, y
+
+    s0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, s0, (xc, Bc, Cc, dtc, dAc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    y = y + params["D"][None, None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * N
+    return {
+        "state": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode_step(params, x, cache, cfg):
+    """One-token recurrence.  x: (B, 1, d) → (y (B,1,d), new cache)."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xBC, dt = _split_proj(cfg, proj)
+    new_conv = jnp.concatenate([cache["conv"][:, 1:],
+                                xBC.astype(cache["conv"].dtype)], axis=1)
+    xBC = _conv(xBC, params["conv_w"], params["conv_b"], state=cache["conv"])
+    xi = xBC[:, 0, :cfg.d_inner].reshape(B, H, P)
+    Bv = xBC[:, 0, cfg.d_inner:cfg.d_inner + N].astype(jnp.float32)
+    Cv = xBC[:, 0, cfg.d_inner + N:].astype(jnp.float32)
+    dt, dA = _gates(cfg, params, dt[:, 0])                       # (B,H)
+    decay = jnp.exp(dA)
+    s_new = (cache["state"] * decay[..., None, None]
+             + jnp.einsum("bh,bn,bhp->bhnp", dt, Bv, xi.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhnp->bhp", Cv, s_new)
+    y = y + params["D"][None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm"], cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return y, {"state": s_new, "conv": new_conv}

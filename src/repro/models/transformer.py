@@ -1,0 +1,582 @@
+"""Scan-over-layers decoder stack covering all ten assigned architectures.
+
+One block body, parameterized by ModelConfig, compiled once by XLA thanks to
+lax.scan over stacked per-layer parameters (compile time stays flat in depth
+— essential for the 512-device dry-runs).  Per-layer structural variation is
+data, not code:
+
+  * attention windows   — (n_blocks, layers_per_block) int32 scanned array
+                          (gemma2 local/global alternation, hymba's three
+                          global layers, danube's uniform SWA, full = seq);
+  * MoE/dense interleave— static `block_structure` (llama4 scans over pairs);
+  * mixers              — attention ("attn"), Mamba2 SSD ("ssm"), or both in
+                          parallel ("hybrid", hymba-style fused heads).
+
+Three entry points per model, matching the dry-run cells:
+  forward()      — full-sequence logits (train / prefill_32k lowering)
+  prefill()      — forward + KV/SSM cache construction
+  decode_step()  — single-token step with caches (decode_32k / long_500k);
+                   SWA layers use O(window) ring buffers, SSM layers O(1)
+                   state — the sub-quadratic-memory requirement of long_500k.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from .layers import (apply_rope, attention, dtype_of, linear,
+                     make_dense_params, rms_norm, rope, sinusoidal,
+                     update_cache_full, update_cache_ring)
+from .moe import make_moe_params, moe_apply
+from .ssm import init_ssm_cache, make_ssm_params, ssm_apply, ssm_decode_step
+
+__all__ = ["make_params", "forward", "prefill", "decode_step", "init_cache",
+           "window_array", "count_params", "active_params"]
+
+FULL_WINDOW = 1 << 30
+
+
+# ------------------------------------------------------------------ params --
+def _make_attn_params(key, cfg: ModelConfig, dtype):
+    d, H, Hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": make_dense_params(ks[0], d, H * dh, dtype),
+        "wk": make_dense_params(ks[1], d, Hk * dh, dtype),
+        "wv": make_dense_params(ks[2], d, Hk * dh, dtype),
+        "wo": make_dense_params(ks[3], H * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dtype)
+        p["k_norm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def _make_mlp_params(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": make_dense_params(ks[0], d, f, dtype),
+        "w_up": make_dense_params(ks[1], d, f, dtype),
+        "w_down": make_dense_params(ks[2], f, d, dtype),
+    }
+
+
+def _make_layer_params(key, cfg: ModelConfig, layer: int, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm_mix": jnp.zeros((d,), dtype),
+                         "norm_mlp": jnp.zeros((d,), dtype)}
+    if cfg.post_norm:
+        p["norm_mix_post"] = jnp.zeros((d,), dtype)
+        p["norm_mlp_post"] = jnp.zeros((d,), dtype)
+    kind = _mixer_kind(cfg)
+    if kind in ("attn", "hybrid"):
+        p["attn"] = _make_attn_params(ks[0], cfg, dtype)
+    if kind in ("ssm", "hybrid"):
+        p["ssm"] = make_ssm_params(ks[1], cfg, dtype)
+    if kind == "hybrid":
+        p["norm_attn_out"] = jnp.zeros((d,), dtype)
+        p["norm_ssm_out"] = jnp.zeros((d,), dtype)
+    if cfg.mlp_kind(layer) == "moe":
+        p["moe"] = make_moe_params(ks[2], cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = _make_mlp_params(ks[3], cfg, dtype)
+    else:
+        del p["norm_mlp"]          # attention-free mamba2: mixer-only blocks
+        if cfg.post_norm:
+            del p["norm_mlp_post"]
+    return p
+
+
+def _mixer_kind(cfg: ModelConfig) -> str:
+    if cfg.hybrid:
+        return "hybrid"
+    if cfg.ssm and cfg.attention == "none":
+        return "ssm"
+    return "attn"
+
+
+def make_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = dtype_of(cfg)
+    keys = jax.random.split(key, cfg.n_blocks + 3)
+    # one block = layers_per_block consecutive layers (llama4: dense+moe pair)
+    blocks = []
+    for b in range(cfg.n_blocks):
+        sub = {}
+        for i in range(cfg.layers_per_block):
+            layer = b * cfg.layers_per_block + i
+            sub[f"sub{i}"] = _make_layer_params(
+                jax.random.fold_in(keys[b], i), cfg, layer, dtype)
+        blocks.append(sub)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *blocks)
+    params = {
+        "embed": (jax.random.normal(keys[-3], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "blocks": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = make_dense_params(keys[-2], cfg.d_model,
+                                              cfg.vocab_size, dtype)
+    return params
+
+
+def window_array(cfg: ModelConfig, seq_len: int) -> np.ndarray:
+    """(n_blocks, layers_per_block) int32 effective windows."""
+    out = np.zeros((cfg.n_blocks, cfg.layers_per_block), np.int32)
+    for b in range(cfg.n_blocks):
+        for i in range(cfg.layers_per_block):
+            w = cfg.window_for_layer(b * cfg.layers_per_block + i, seq_len)
+            out[b, i] = min(w, FULL_WINDOW)
+    return out
+
+
+# ----------------------------------------------------------------- sublayers
+def _attn_full(p, h, cfg: ModelConfig, window, positions):
+    """Full-sequence attention sublayer (train/prefill).  Returns out, (k,v)."""
+    B, S, d = h.shape
+    H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+    q = linear(x, p["attn"]["wq"], cfg.linear_backend).reshape(B, S, H, dh)
+    k = linear(x, p["attn"]["wk"], cfg.linear_backend).reshape(B, S, Hk, dh)
+    v = linear(x, p["attn"]["wv"], cfg.linear_backend).reshape(B, S, Hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+    if cfg.pos == "rope":
+        cos, sin = rope(positions, dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    o = attention(q, k, v, positions, positions, window=window,
+                  softcap=cfg.softcap_attn, block_kv=cfg.attn_block_kv)
+    o = linear(o.reshape(B, S, H * dh), p["attn"]["wo"], cfg.linear_backend)
+    o = checkpoint_name(o, "mixer_out")
+    if cfg.post_norm:
+        o = rms_norm(o, p["norm_mix_post"], cfg.norm_eps)
+    return o, (k, v)
+
+
+def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache):
+    """One-token attention with cache update.  h: (B, 1, d)."""
+    B = h.shape[0]
+    H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+    q = linear(x, p["attn"]["wq"], cfg.linear_backend).reshape(B, 1, H, dh)
+    k = linear(x, p["attn"]["wk"], cfg.linear_backend).reshape(B, 1, Hk, dh)
+    v = linear(x, p["attn"]["wv"], cfg.linear_backend).reshape(B, 1, Hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+    qpos = pos[None]
+    if cfg.pos == "rope":
+        cos, sin = rope(qpos, dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if "pos" in cache:                     # ring buffer (SWA layer)
+        ck, cv, cp = update_cache_ring(cache["k"], cache["v"], cache["pos"],
+                                       k, v, pos)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+        kpos = cp
+    else:                                  # full cache (global layer)
+        ck, cv = update_cache_full(cache["k"], cache["v"], k, v, pos)
+        new_cache = {"k": ck, "v": cv}
+        kpos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+    o = attention(q, ck.astype(q.dtype), cv.astype(q.dtype), qpos, kpos,
+                  window=window, softcap=cfg.softcap_attn,
+                  block_kv=cfg.attn_block_kv)
+    o = linear(o.reshape(B, 1, H * dh), p["attn"]["wo"], cfg.linear_backend)
+    if cfg.post_norm:
+        o = rms_norm(o, p["norm_mix_post"], cfg.norm_eps)
+    return o, new_cache
+
+
+def _ssm_full(p, h, cfg: ModelConfig):
+    x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+    o = ssm_apply(p["ssm"], x, cfg)
+    if cfg.post_norm:
+        o = rms_norm(o, p["norm_mix_post"], cfg.norm_eps)
+    return o
+
+
+def _act(name: str):
+    return jax.nn.silu if name == "silu" else jax.nn.gelu
+
+
+def _mlp(p, h, cfg: ModelConfig):
+    x = rms_norm(h, p["norm_mlp"], cfg.norm_eps)
+    g = _act(cfg.act)(linear(x, p["mlp"]["w_gate"], cfg.linear_backend))
+    if cfg.glu:
+        g = g * linear(x, p["mlp"]["w_up"], cfg.linear_backend)
+    o = linear(g, p["mlp"]["w_down"], cfg.linear_backend)
+    o = checkpoint_name(o, "mlp_out")
+    if cfg.post_norm:
+        o = rms_norm(o, p["norm_mlp_post"], cfg.norm_eps)
+    return o
+
+
+def _moe(p, h, cfg: ModelConfig):
+    x = rms_norm(h, p["norm_mlp"], cfg.norm_eps)
+    o, aux = moe_apply(p["moe"], x, cfg)
+    if cfg.post_norm:
+        o = rms_norm(o, p["norm_mlp_post"], cfg.norm_eps)
+    return o, aux
+
+
+# ------------------------------------------------------------------- layers -
+def _layer_full(p, h, cfg: ModelConfig, layer_in_block: int, window,
+                positions):
+    kind = _mixer_kind(cfg)
+    aux = jnp.float32(0.0)
+    if kind == "attn":
+        o, _ = _attn_full(p, h, cfg, window, positions)
+        h = h + o
+    elif kind == "ssm":
+        h = h + _ssm_full(p, h, cfg)
+    else:  # hybrid: parallel attention + ssm on the same normed input
+        oa, _ = _attn_full(p, h, cfg, window, positions)
+        os_ = _ssm_full(p, h, cfg)
+        oa = rms_norm(oa, p["norm_attn_out"], cfg.norm_eps)
+        os_ = rms_norm(os_, p["norm_ssm_out"], cfg.norm_eps)
+        h = h + 0.5 * (oa + os_)
+    if cfg.mlp_kind(layer_in_block) == "moe":
+        o, aux = _moe(p, h, cfg)
+        h = h + o
+    elif cfg.d_ff > 0:
+        h = h + _mlp(p, h, cfg)
+    return h, aux
+
+
+def _stack_apply(cfg: ModelConfig, params, h, windows, positions,
+                 want_cache: bool):
+    """Scan over blocks (train / full-sequence forward)."""
+
+    def body(carry, xs):
+        hh = carry
+        blk, wrow = xs
+        auxes = jnp.float32(0.0)
+        for i in range(cfg.layers_per_block):
+            hh, aux = _layer_full(blk[f"sub{i}"], hh, cfg, i, wrow[i],
+                                  positions)
+            auxes = auxes + aux
+        return hh, auxes
+
+    if not cfg.scan_layers:          # unrolled: exact HLO cost accounting
+        auxes = jnp.float32(0.0)
+        for b in range(cfg.n_blocks):
+            blk = jax.tree.map(lambda x: x[b], params["blocks"])
+            h, aux = body(h, (blk, windows[b]))
+            auxes = auxes + aux
+        return h, auxes / cfg.n_blocks, None
+
+    if cfg.remat and cfg.remat_policy != "none":
+        if cfg.remat_policy == "save_ar":
+            # keep the row-parallel projection outputs (the tensors whose
+            # recompute would repeat the TP all-reduces) — backward reuses
+            # them, cutting the per-layer collective multiplier 3× → 2×
+            # (EXPERIMENTS.md §Perf cell B).
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "mixer_out", "mlp_out")
+            body = jax.checkpoint(body, policy=policy)
+        else:
+            body = jax.checkpoint(body)
+    h, auxes = jax.lax.scan(body, h, (params["blocks"], windows))
+    return h, jnp.mean(auxes), None
+
+
+# ------------------------------------------------------------------ forward -
+def _embed(cfg: ModelConfig, params, batch):
+    if cfg.frontend == "embeddings":
+        h = batch["embeds"].astype(dtype_of(cfg))
+        B, S = h.shape[0], h.shape[1]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.pos == "sinusoidal":
+        h = h + sinusoidal(positions, cfg.d_model)[None].astype(h.dtype)
+    return h, positions
+
+
+def _lm_head(cfg: ModelConfig, params, h):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w).astype(jnp.float32)
+    if cfg.softcap_final is not None:
+        logits = jnp.tanh(logits / cfg.softcap_final) * cfg.softcap_final
+    return logits
+
+
+def forward(cfg: ModelConfig, params, batch):
+    """Full-sequence logits: (B, S, vocab) float32."""
+    h, positions = _embed(cfg, params, batch)
+    windows = jnp.asarray(window_array(cfg, h.shape[1]))
+    h, aux, _ = _stack_apply(cfg, params, h, windows, positions, False)
+    return _lm_head(cfg, params, h), aux
+
+
+# ------------------------------------------------------------------- caches -
+def _layer_cache_spec(cfg: ModelConfig, layer: int, batch: int, smax: int,
+                      dtype):
+    """Zeroed decode cache for one layer."""
+    kind = _mixer_kind(cfg)
+    out: Dict[str, Any] = {}
+    Hk, dh = cfg.num_kv_heads, cfg.head_dim
+    if kind in ("attn", "hybrid"):
+        w = cfg.window_for_layer(layer, smax)
+        if w < smax:          # bounded ring buffer (SWA layer)
+            out["k"] = jnp.zeros((batch, w, Hk, dh), dtype)
+            out["v"] = jnp.zeros((batch, w, Hk, dh), dtype)
+            out["pos"] = jnp.full((w,), -1, jnp.int32)
+        else:
+            out["k"] = jnp.zeros((batch, smax, Hk, dh), dtype)
+            out["v"] = jnp.zeros((batch, smax, Hk, dh), dtype)
+    if kind in ("ssm", "hybrid"):
+        out["ssm"] = init_ssm_cache(cfg, batch, dtype)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int):
+    """Stacked decode caches for the whole stack.
+
+    Layers inside a block can have different window sizes (gemma2 pairs),
+    so caches are keyed per sub-layer and stacked over blocks only when the
+    shapes agree; otherwise kept per-sub (static structure either way).
+    """
+    dtype = dtype_of(cfg)
+    out = {}
+    for i in range(cfg.layers_per_block):
+        per_block = [
+            _layer_cache_spec(cfg, b * cfg.layers_per_block + i, batch, smax,
+                              dtype)
+            for b in range(cfg.n_blocks)
+        ]
+        shapes = [jax.tree.map(lambda x: x.shape, pb) for pb in per_block]
+        if all(s == shapes[0] for s in shapes):
+            out[f"sub{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                                          *per_block)
+        else:
+            # heterogeneous windows within the column (hymba's 3 global
+            # layers): keep a per-block list pytree (no scan over caches).
+            out[f"sub{i}"] = {"per_block": per_block}
+    return out
+
+
+def _cache_is_stacked(cache_col) -> bool:
+    return "per_block" not in cache_col
+
+
+# -------------------------------------------------------------- decode step -
+def _layer_decode(p, h, cfg: ModelConfig, block_layer, window, pos, cache):
+    kind = _mixer_kind(cfg)
+    new_cache = {}
+    if kind == "attn":
+        o, nc = _attn_decode(p, h, cfg, window, pos, cache)
+        new_cache.update(nc)
+        h = h + o
+    elif kind == "ssm":
+        x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+        o, ns = ssm_decode_step(p["ssm"], x, cache["ssm"], cfg)
+        if cfg.post_norm:
+            o = rms_norm(o, p["norm_mix_post"], cfg.norm_eps)
+        new_cache["ssm"] = ns
+        h = h + o
+    else:
+        oa, nc = _attn_decode(p, h, cfg, window, pos,
+                              {k: v for k, v in cache.items() if k != "ssm"})
+        x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+        os_, ns = ssm_decode_step(p["ssm"], x, cache["ssm"], cfg)
+        new_cache.update(nc)
+        new_cache["ssm"] = ns
+        oa = rms_norm(oa, p["norm_attn_out"], cfg.norm_eps)
+        os_ = rms_norm(os_, p["norm_ssm_out"], cfg.norm_eps)
+        h = h + 0.5 * (oa + os_)
+    if cfg.mlp_kind(block_layer) == "moe":
+        o, _ = _moe(p, h, cfg)
+        h = h + o
+    elif cfg.d_ff > 0:
+        h = h + _mlp(p, h, cfg)
+    return h, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch, pos):
+    """One decode step.  batch: {"tokens": (B, 1)} (or embeds); pos scalar.
+
+    Returns (logits (B, vocab) f32, new_cache).
+    """
+    if cfg.frontend == "embeddings":
+        h = batch["embeds"].astype(dtype_of(cfg))
+    else:
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.pos == "sinusoidal":
+        h = h + sinusoidal(pos[None], cfg.d_model)[None].astype(h.dtype)
+
+    windows = jnp.asarray(window_array(cfg, FULL_WINDOW))
+    all_stacked = all(_cache_is_stacked(cache[f"sub{i}"])
+                      for i in range(cfg.layers_per_block))
+    if all_stacked:
+        def body(carry, xs):
+            hh = carry
+            blk, wrow, crow = xs
+            new_rows = {}
+            for i in range(cfg.layers_per_block):
+                hh, nc = _layer_decode(blk[f"sub{i}"], hh, cfg, i, wrow[i],
+                                       pos, crow[f"sub{i}"])
+                new_rows[f"sub{i}"] = nc
+            return hh, new_rows
+
+        cache_xs = {f"sub{i}": cache[f"sub{i}"]
+                    for i in range(cfg.layers_per_block)}
+        h, new_caches = jax.lax.scan(body, h,
+                                     (params["blocks"], windows, cache_xs))
+    else:
+        # heterogeneous caches: unrolled layer loop (hymba: 32 layers)
+        new_caches = {f"sub{i}": {"per_block": []}
+                      for i in range(cfg.layers_per_block)}
+        for b in range(cfg.n_blocks):
+            blk = jax.tree.map(lambda x: x[b], params["blocks"])
+            for i in range(cfg.layers_per_block):
+                col = cache[f"sub{i}"]
+                c = col["per_block"][b] if not _cache_is_stacked(col) \
+                    else jax.tree.map(lambda x: x[b], col)
+                h, nc = _layer_decode(blk[f"sub{i}"], h, cfg, i,
+                                      windows[b, i], pos, c)
+                new_caches[f"sub{i}"]["per_block"].append(nc)
+        for i in range(cfg.layers_per_block):
+            col = cache[f"sub{i}"]
+            if _cache_is_stacked(col):
+                new_caches[f"sub{i}"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs, 0),
+                    *new_caches[f"sub{i}"]["per_block"])
+
+    logits = _lm_head(cfg, params, h)[:, 0]
+    return logits, new_caches
+
+
+# ----------------------------------------------------------------- prefill --
+def prefill(cfg: ModelConfig, params, batch, smax: int):
+    """Forward + cache build.  Returns (last-token logits, cache, pos)."""
+    h, positions = _embed(cfg, params, batch)
+    B, S = h.shape[0], h.shape[1]
+    dtype = dtype_of(cfg)
+    windows = jnp.asarray(window_array(cfg, S))
+    cache = init_cache(cfg, B, smax)
+
+    # run layer by layer (unrolled) so each layer's K/V and SSM state can be
+    # written into its cache slot; prefill is a serving-time operation where
+    # the S×layer loop cost is dominated by the matmuls anyway.
+    kind = _mixer_kind(cfg)
+    for b in range(cfg.n_blocks):
+        blk = jax.tree.map(lambda x: x[b], params["blocks"])
+        for i in range(cfg.layers_per_block):
+            layer = b * cfg.layers_per_block + i
+            p = blk[f"sub{i}"]
+            aux = None
+            col = cache[f"sub{i}"]
+            c = col["per_block"][b] if not _cache_is_stacked(col) else None
+
+            if kind in ("attn", "hybrid"):
+                oa, (k, v) = _attn_full(p, h, cfg, windows[b, i], positions)
+            if kind in ("ssm", "hybrid"):
+                x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+                os_, ssm_c = _ssm_prefill(p["ssm"], x, cfg)
+                if cfg.post_norm:
+                    os_ = rms_norm(os_, p["norm_mix_post"], cfg.norm_eps)
+            if kind == "attn":
+                h = h + oa
+            elif kind == "ssm":
+                h = h + os_
+            else:
+                oa2 = rms_norm(oa, p["norm_attn_out"], cfg.norm_eps)
+                os2 = rms_norm(os_, p["norm_ssm_out"], cfg.norm_eps)
+                h = h + 0.5 * (oa2 + os2)
+            if cfg.mlp_kind(i) == "moe":
+                o, _ = _moe(p, h, cfg)
+                h = h + o
+            elif cfg.d_ff > 0:
+                h = h + _mlp(p, h, cfg)
+
+            # ---- write caches
+            upd = {}
+            if kind in ("attn", "hybrid"):
+                w = cfg.window_for_layer(layer, smax)
+                if w < smax:   # ring
+                    L = min(w, S)
+                    ts = jnp.arange(S - L, S)
+                    slots = jnp.mod(ts, w)
+                    ck = jnp.zeros((B, w) + k.shape[2:], dtype)
+                    cv = jnp.zeros((B, w) + v.shape[2:], dtype)
+                    ck = ck.at[:, slots].set(k[:, S - L:].astype(dtype))
+                    cv = cv.at[:, slots].set(v[:, S - L:].astype(dtype))
+                    cp = jnp.full((w,), -1, jnp.int32).at[slots].set(
+                        ts.astype(jnp.int32))
+                    upd.update({"k": ck, "v": cv, "pos": cp})
+                else:
+                    ck = jnp.zeros((B, smax) + k.shape[2:], dtype)
+                    cv = jnp.zeros((B, smax) + v.shape[2:], dtype)
+                    ck = jax.lax.dynamic_update_slice(
+                        ck, k.astype(dtype), (0, 0, 0, 0))
+                    cv = jax.lax.dynamic_update_slice(
+                        cv, v.astype(dtype), (0, 0, 0, 0))
+                    upd.update({"k": ck, "v": cv})
+            if kind in ("ssm", "hybrid"):
+                upd["ssm"] = ssm_c
+            col = cache[f"sub{i}"]
+            if _cache_is_stacked(col):
+                cache[f"sub{i}"] = jax.tree.map(
+                    lambda full, new: full.at[b].set(new), col, upd)
+            else:
+                col["per_block"][b] = upd
+
+    logits = _lm_head(cfg, params, h)[:, -1]
+    return logits, cache, jnp.int32(S)
+
+
+def _ssm_prefill(ssm_params, x, cfg):
+    """SSD forward that also returns the decode cache (state + conv tail)."""
+    from .ssm import _conv, _gates, _split_proj  # reuse internals
+    B, S, _ = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = jnp.einsum("bsd,de->bse", x, ssm_params["in_proj"])
+    z, xBC_raw, dt = _split_proj(cfg, proj)
+    conv_tail = xBC_raw[:, S - (cfg.ssm_conv - 1):, :]
+    y = ssm_apply(ssm_params, x, cfg)
+    # final state: rerun the recurrence cheaply at chunk granularity
+    xBC = _conv(xBC_raw, ssm_params["conv_w"], ssm_params["conv_b"])
+    xi = xBC[..., :cfg.d_inner].reshape(B, S, H, P).astype(jnp.float32)
+    Bv = xBC[..., cfg.d_inner:cfg.d_inner + N].astype(jnp.float32)
+    dt_, dA = _gates(cfg, ssm_params, dt)
+    cum = jnp.cumsum(dA, axis=1)
+    tail = jnp.exp(cum[:, -1:, :] - cum)
+    state = jnp.einsum("bth,btn,bthp->bhnp", tail * dt_, Bv, xi)
+    cache = {"state": state,
+             "conv": conv_tail.astype(dtype_of(cfg))}
+    return y, cache
+
+
+# -------------------------------------------------------------- accounting --
+def count_params(cfg: ModelConfig) -> int:
+    """Total parameter count (exact, from shapes)."""
+    shapes = jax.eval_shape(
+        lambda k: make_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Active-per-token parameters (MoE: top_k experts + shared + backbone)."""
+    total = count_params(cfg)
+    if not cfg.moe:
+        return total
+    f = cfg.moe_d_ff or cfg.d_ff
+    per_expert = 3 * cfg.d_model * f if cfg.glu else 2 * cfg.d_model * f
+    n_moe_layers = sum(1 for l in range(cfg.num_layers)
+                       if cfg.mlp_kind(l) == "moe")
+    inactive = n_moe_layers * (cfg.num_experts - cfg.top_k) * per_expert
+    return total - inactive

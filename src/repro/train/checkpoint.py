@@ -1,0 +1,133 @@
+"""Atomic, mesh-elastic checkpointing.
+
+Design goals (DESIGN.md §6 fault tolerance):
+  * atomic    — writes go to `<dir>/tmp-<step>` and are renamed to
+                `<dir>/step-<step>` only after the manifest is durable; a
+                crash mid-save never corrupts the latest checkpoint.
+  * elastic   — arrays are saved by *logical* value (host-gathered numpy),
+                so a restore may target any mesh/device count/sharding; the
+                caller re-shards with jax.device_put.  A job restarted on a
+                different slice topology resumes bit-identically.
+  * async     — `save(..., blocking=False)` snapshots to host memory
+                synchronously (cheap) and writes in a daemon thread so the
+                train loop never stalls on the filesystem.
+  * bounded   — keep_last retains the newest K checkpoints.
+
+Layout:  step-<N>/manifest.json  (tree structure, dtypes, shapes)
+         step-<N>/<leaf-index>.npy
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "wait_for_pending"]
+
+_PENDING: list[threading.Thread] = []
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, keep_last: int = 3,
+         blocking: bool = True) -> str:
+    """Save a pytree checkpoint.  Returns the final directory path."""
+    leaves, treedef = _flatten_with_paths(tree)
+    # snapshot to host synchronously (device buffers may change after return)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    manifest = {
+        "step": int(step),
+        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
+        if hasattr(jax.tree_util.tree_structure(tree), "serialize_using_proto")
+        else None,
+        "n_leaves": len(host_leaves),
+        "dtypes": [str(x.dtype) for x in host_leaves],
+        "shapes": [list(x.shape) for x in host_leaves],
+    }
+
+    def _write():
+        tmp = os.path.join(ckpt_dir, f"tmp-{step}")
+        final = os.path.join(ckpt_dir, f"step-{step}")
+        os.makedirs(tmp, exist_ok=True)
+        for i, x in enumerate(host_leaves):
+            np.save(os.path.join(tmp, f"{i}.npy"), x)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)                      # atomic publish
+        _gc(ckpt_dir, keep_last)
+
+    os.makedirs(ckpt_dir, exist_ok=True)
+    if blocking:
+        _write()
+    else:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        _PENDING.append(t)
+    return os.path.join(ckpt_dir, f"step-{step}")
+
+
+def wait_for_pending():
+    for t in _PENDING:
+        t.join()
+    _PENDING.clear()
+
+
+def _gc(ckpt_dir: str, keep_last: int):
+    steps = sorted(_list_steps(ckpt_dir))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step-{s}"), ignore_errors=True)
+
+
+def _list_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step-"):
+            try:
+                out.append(int(name.split("-", 1)[1]))
+            except ValueError:
+                pass
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _list_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (shapes/dtypes validated).
+
+    `like` supplies the treedef — robust across JAX versions and independent
+    of how the tree was serialized; any mesh may be applied afterwards via
+    jax.device_put(tree, shardings) (mesh-elastic restore).
+    """
+    path = os.path.join(ckpt_dir, f"step-{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree.flatten(like)
+    assert manifest["n_leaves"] == len(leaves), \
+        f"checkpoint has {manifest['n_leaves']} leaves, model has {len(leaves)}"
+    out = []
+    for i, ref in enumerate(leaves):
+        x = np.load(os.path.join(path, f"{i}.npy"))
+        if x.dtype.kind == "V":
+            # ml_dtypes (bfloat16 etc.) round-trip through .npy as raw void
+            # records; reinterpret using the dtype recorded in the manifest.
+            import ml_dtypes  # noqa: F401  (registers the dtypes)
+            x = x.view(np.dtype(manifest["dtypes"][i]))
+        assert list(x.shape) == list(ref.shape), \
+            f"leaf {i}: ckpt {x.shape} vs model {ref.shape}"
+        out.append(x.astype(ref.dtype) if hasattr(ref, "dtype") else x)
+    return jax.tree.unflatten(treedef, out), manifest["step"]

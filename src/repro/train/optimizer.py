@@ -1,0 +1,140 @@
+"""Optimizers: AdamW (fp32 state) and Adafactor (factored second moments).
+
+Minimal, dependency-free pytree implementations with the standard production
+policies: bf16 params / fp32 optimizer state, global-norm gradient clipping,
+linear-warmup + cosine decay schedule.  Adafactor is selected for
+llama4-maverick-400b (AdamW's 2×fp32 state for 400B params ≈ 3.2 TB would
+dominate HBM at 512 chips; the factored row/col statistics are what real
+frameworks run at that scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "make_optimizer",
+           "cosine_schedule", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup)
+        frac = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup),
+                        0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), grads), g
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_fn(step)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         state["v"], grads)
+        mhat_scale = 1.0 / (1.0 - b1 ** t)
+        vhat_scale = 1.0 / (1.0 - b2 ** t)
+
+        def upd(p, m, v):
+            u = (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(lr_fn, eps: float = 1e-30, clip: float = 1.0,
+              weight_decay: float = 0.0, min_dim_factored: int = 2) -> Optimizer:
+    """Factored RMS optimizer (Shazeer & Stern 2018), no momentum.
+
+    ≥2D leaves keep only row/col second-moment statistics — O(n+m) state per
+    (n, m) matrix instead of O(n·m); 1D/0D leaves keep full statistics.
+    """
+    def init(params):
+        def st(x):
+            if x.ndim >= min_dim_factored:
+                return {"vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(x.shape, jnp.float32)}
+        return jax.tree.map(st, params,
+                            is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta2 = 1.0 - t ** -0.8
+        lr = lr_fn(step)
+
+        def upd(p, g, s):
+            g2 = g * g + eps
+            if p.ndim >= min_dim_factored:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / (jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                            + eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS ≤ 1) per Adafactor
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_state = tdef.unflatten([o[1] for o in outs])
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(cfg, total_steps: int = 10000, base_lr: float = 3e-4,
+                   warmup: int | None = None) -> Optimizer:
+    if warmup is None:
+        warmup = min(200, max(1, total_steps // 10))
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr_fn)
+    return adamw(lr_fn)

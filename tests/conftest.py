@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run with `PYTHONPATH=src pytest tests/`; this mirror makes bare
+# `pytest` work too.  NOTE: no XLA_FLAGS here — smoke tests must see the
+# real (1-CPU) device count; only launch/dryrun.py forces 512 devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

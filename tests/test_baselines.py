@@ -1,0 +1,66 @@
+"""Baseline designs [14], [15] (paper §III-B, Fig. 1) as functional models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import (hiasat_effective_width, matutino_applicable,
+                                  mulmod_binary, mulmod_hiasat,
+                                  mulmod_matutino)
+from repro.core.twit import Modulus, admissible_deltas
+
+
+@pytest.mark.parametrize("sign", [+1, -1])
+@pytest.mark.parametrize("delta", list(admissible_deltas(5)))
+def test_hiasat_exhaustive_n5(delta, sign):
+    mod = Modulus(n=5, delta=delta, sign=sign)
+    for a in range(mod.m):
+        for b in range(0, mod.m, 3):
+            assert mulmod_hiasat(a, b, mod) == (a * b) % mod.m
+
+
+def test_hiasat_plus_widens_datapath():
+    """Table III observation: [14] on 2^n+δ needs an (n+1)-bit datapath."""
+    assert hiasat_effective_width(Modulus(8, 9, -1)) == 8
+    assert hiasat_effective_width(Modulus(8, 9, +1)) == 9
+
+
+def test_matutino_applicability():
+    """[15] requires δ < 2^⌊n/2⌋ — the missing red bars of Fig. 5."""
+    # n=5: 2^2 = 4 ⇒ only δ ∈ {1,3} supported
+    assert matutino_applicable(Modulus(5, 3, +1))
+    assert not matutino_applicable(Modulus(5, 5, +1))
+    assert not matutino_applicable(Modulus(5, 15, -1))
+    # n=8: δ < 16 ⇒ 3, 9 OK; 127 not (Table III omits those entries)
+    assert matutino_applicable(Modulus(8, 9, -1))
+    assert not matutino_applicable(Modulus(8, 127, +1))
+    # n=11: δ < 32 ⇒ 1023 not
+    assert not matutino_applicable(Modulus(11, 1023, -1))
+
+
+@pytest.mark.parametrize("n,delta", [(5, 1), (5, 3), (8, 3), (8, 9),
+                                     (11, 3), (11, 9)])
+@pytest.mark.parametrize("sign", [+1, -1])
+def test_matutino_correct_where_applicable(n, delta, sign):
+    mod = Modulus(n=n, delta=delta, sign=sign)
+    rng = np.random.default_rng(n + delta)
+    for _ in range(500):
+        a = int(rng.integers(0, mod.m))
+        b = int(rng.integers(0, mod.m))
+        assert mulmod_matutino(a, b, mod) == (a * b) % mod.m
+
+
+def test_matutino_raises_outside_range():
+    with pytest.raises(ValueError):
+        mulmod_matutino(1, 1, Modulus(5, 15, +1))
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(3, 13), st.data())
+def test_hiasat_property(n, data):
+    delta = data.draw(st.integers(0, 2 ** (n - 1) - 1))
+    sign = data.draw(st.sampled_from([+1, -1]))
+    mod = Modulus(n=n, delta=delta, sign=sign)
+    a = data.draw(st.integers(0, mod.m - 1))
+    b = data.draw(st.integers(0, mod.m - 1))
+    assert mulmod_hiasat(a, b, mod) == (a * b) % mod.m
+    assert mulmod_binary(a, b, mod.m) == (a * b) % mod.m

@@ -1,0 +1,60 @@
+"""Fold ("squeezing") ladder — the TPU adaptation of Stage ④ (DESIGN.md §8.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.folding import (INT32_SAFE, fold_np, fold_schedule,
+                                max_subtracts, schedule_output_bound)
+from repro.core.twit import Modulus, admissible_deltas
+
+
+@pytest.mark.parametrize("sign", [+1, -1])
+@pytest.mark.parametrize("delta", [d for d in admissible_deltas(5) if d])
+def test_full_delta_range_n5(delta, sign):
+    mod = Modulus(n=5, delta=delta, sign=sign)
+    bound = INT32_SAFE
+    sched = fold_schedule(bound, mod)
+    # bound lemma: proven output bound reaches the target
+    assert schedule_output_bound(bound, sched) < 8 * mod.m
+    rng = np.random.default_rng(delta * (2 + sign))
+    xs = rng.integers(0, bound, 50_000, dtype=np.int64)
+    assert np.array_equal(fold_np(xs, mod, bound), xs % mod.m)
+
+
+@pytest.mark.parametrize("n,delta", [(8, 3), (8, 127), (11, 9), (11, 1023)])
+@pytest.mark.parametrize("sign", [+1, -1])
+def test_larger_widths(n, delta, sign):
+    mod = Modulus(n=n, delta=delta, sign=sign)
+    bound = INT32_SAFE
+    xs = np.random.default_rng(0).integers(0, bound, 20_000, dtype=np.int64)
+    assert np.array_equal(fold_np(xs, mod, bound), xs % mod.m)
+
+
+def test_int32_safety_asserted():
+    """Every rung's hi·c product is proven < 2^31 by the scheduler."""
+    mod = Modulus(n=5, delta=15, sign=+1)
+    sched = fold_schedule(INT32_SAFE, mod)
+    b = INT32_SAFE
+    for s, c in sched:
+        assert (b >> s) * c <= INT32_SAFE
+        b = min(b, (1 << s) - 1) + (b >> s) * c
+
+
+def test_edge_values():
+    mod = Modulus(n=5, delta=9, sign=-1)
+    bound = INT32_SAFE
+    edge = np.array([0, 1, mod.m - 1, mod.m, 2**30, INT32_SAFE - 1,
+                     INT32_SAFE], dtype=np.int64)
+    assert np.array_equal(fold_np(edge, mod, bound), edge % mod.m)
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(4, 12), st.data())
+def test_property(n, data):
+    delta = data.draw(st.integers(1, 2 ** (n - 1) - 1))
+    sign = data.draw(st.sampled_from([+1, -1]))
+    mod = Modulus(n=n, delta=delta, sign=sign)
+    bound = data.draw(st.integers(8 * mod.m, INT32_SAFE))
+    x = data.draw(st.integers(0, bound))
+    got = fold_np(np.array([x]), mod, bound)[0]
+    assert got == x % mod.m

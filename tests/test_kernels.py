@@ -1,0 +1,113 @@
+"""Pallas kernel sweeps: shapes/dtypes vs the pure-jnp oracles (interpret
+mode executes the kernel bodies on CPU — bit-exact for the integer kernels).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.rns import basis_for_accumulation
+from repro.kernels import flash_attention, fold, rns_matmul, rns_modmul
+from repro.kernels import ref
+
+MODULI = basis_for_accumulation(1024 * 127 * 127).moduli
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (32, 64, 32, 32, 32, 32),
+    (48, 96, 80, 32, 32, 32),      # padding on every dim
+    (128, 256, 128, 64, 64, 128),
+    (8, 1024, 8, 8, 8, 256),       # deep K accumulation
+])
+def test_rns_matmul_sweep(M, K, N, bm, bn, bk):
+    rng = np.random.default_rng(M * K + N)
+    xq = rng.integers(-127, 128, (M, K)).astype(np.int64)
+    wq = rng.integers(-127, 128, (K, N)).astype(np.int64)
+    a = np.stack([np.mod(xq, m) for m in MODULI]).astype(np.int8)
+    b = np.stack([np.mod(wq, m) for m in MODULI]).astype(np.int8)
+    got = np.asarray(rns_matmul(jnp.asarray(a), jnp.asarray(b), MODULI,
+                                block_m=bm, block_n=bn, block_k=bk))
+    want = np.stack([np.mod(xq @ wq, m) for m in MODULI])
+    assert np.array_equal(got, want)
+
+
+def test_rns_matmul_matches_ref():
+    rng = np.random.default_rng(7)
+    a = np.stack([rng.integers(0, m, (16, 32)) for m in MODULI]).astype(np.int8)
+    b = np.stack([rng.integers(0, m, (32, 24)) for m in MODULI]).astype(np.int8)
+    got = np.asarray(rns_matmul(jnp.asarray(a), jnp.asarray(b), MODULI,
+                                block_m=16, block_n=8, block_k=16))
+    want = np.asarray(ref.rns_matmul_ref(jnp.asarray(a), jnp.asarray(b),
+                                         MODULI))
+    assert np.array_equal(got, want)
+
+
+def test_rns_matmul_overflow_guard():
+    a = jnp.zeros((len(MODULI), 8, 2**21), jnp.int8)
+    b = jnp.zeros((len(MODULI), 2**21, 8), jnp.int8)
+    with pytest.raises(ValueError):
+        rns_matmul(a, b, MODULI)
+
+
+@pytest.mark.parametrize("S,blk", [(64, 64), (1000, 128), (4096, 1024)])
+def test_rns_modmul_sweep(S, blk):
+    rng = np.random.default_rng(S)
+    a = np.stack([rng.integers(0, m, S) for m in MODULI]).astype(np.int32)
+    b = np.stack([rng.integers(0, m, S) for m in MODULI]).astype(np.int32)
+    got = np.asarray(rns_modmul(jnp.asarray(a), jnp.asarray(b), MODULI,
+                                block=blk))
+    want = np.stack([(a[c].astype(np.int64) * b[c]) % MODULI[c]
+                     for c in range(len(MODULI))])
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("bound", [2**15, 2**25, 2**31 - 1])
+def test_fold_sweep(bound):
+    rng = np.random.default_rng(bound % 1000)
+    x = np.stack([rng.integers(0, bound, 600) for _ in MODULI]).astype(np.int64)
+    got = np.asarray(fold(jnp.asarray(x.astype(np.int32)), MODULI, bound,
+                          block=256))
+    want = np.stack([x[c] % MODULI[c] for c in range(len(MODULI))])
+    assert np.array_equal(got, want)
+
+
+def test_fold_includes_pow2_channel():
+    mods = (1024, 47, 31)
+    x = np.array([[2**30, 1023, 1024], [5000, 46, 47], [12345, 1, 0]],
+                 dtype=np.int32)
+    got = np.asarray(fold(jnp.asarray(x), mods, 2**31 - 1, block=4))
+    want = np.stack([x[c].astype(np.int64) % mods[c] for c in range(3)])
+    assert np.array_equal(got, want)
+
+
+ATTN_CASES = [
+    # (B, H, Sq, Sk, D, window, softcap, dtype)
+    (2, 3, 64, 64, 32, None, None, jnp.float32),
+    (1, 2, 128, 128, 32, 32, None, jnp.float32),
+    (1, 2, 64, 64, 32, None, 30.0, jnp.float32),
+    (1, 2, 1, 96, 32, None, None, jnp.float32),      # decode shape
+    (1, 1, 100, 100, 16, 24, 50.0, jnp.float32),     # padding + both extras
+    (2, 2, 64, 64, 64, None, None, jnp.bfloat16),    # dtype sweep
+]
+
+
+@pytest.mark.parametrize("B,H,Sq,Sk,D,win,cap,dtype", ATTN_CASES)
+def test_flash_attention_sweep(B, H, Sq, Sk, D, win, cap, dtype):
+    rng = np.random.default_rng(B * Sq + Sk)
+    q = jnp.asarray(rng.standard_normal((B, H, Sq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, H, Sk, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, H, Sk, D)), dtype)
+    got = flash_attention(q, k, v, causal=True, window=win, softcap=cap,
+                          block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, causal=True, window=win, softcap=cap)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_channel_schedules_shared():
+    """Kernel and oracle provably share the same fold ladders."""
+    sched, mods, n_sub = ref.channel_schedules(MODULI, 1024 * 46 * 46)
+    assert sched.shape[0] == len(MODULI)
+    assert (mods == np.array(MODULI)).all()
+    assert 1 <= n_sub <= 3

@@ -1,0 +1,57 @@
+"""Twit adder substrate ([16], summarized in paper §IV-A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.modadd import (AddTrace, addmod_twit, addmod_twit_np,
+                               negate_twit, submod_twit)
+from repro.core.twit import Modulus, admissible_deltas, all_codewords
+
+
+@pytest.mark.parametrize("sign", [+1, -1])
+@pytest.mark.parametrize("delta", list(admissible_deltas(5)))
+def test_exhaustive_values_n5(delta, sign):
+    mod = Modulus(n=5, delta=delta, sign=sign)
+    a, b = np.meshgrid(np.arange(mod.m), np.arange(mod.m))
+    got = addmod_twit_np(a.ravel(), b.ravel(), mod)
+    assert np.array_equal(got, (a.ravel() + b.ravel()) % mod.m)
+
+
+@pytest.mark.parametrize("sign", [+1, -1])
+@pytest.mark.parametrize("delta", [5, 15])
+def test_exhaustive_codewords(delta, sign):
+    """All 2^(n+1) × 2^(n+1) codeword pairs, incl. redundant forms."""
+    mod = Modulus(n=5, delta=delta, sign=sign)
+    cws = all_codewords(mod)
+    for a in cws[::3]:
+        for b in cws[::5]:
+            assert addmod_twit(a, b, mod) == (a.value + b.value) % mod.m
+
+
+def test_single_cpa_structure():
+    """[16]: one CPA; carry-out triggers the twit correction."""
+    mod = Modulus(n=5, delta=7, sign=-1)
+    tr = AddTrace()
+    out = addmod_twit(20, 15, mod, trace=tr)
+    assert out == (20 + 15) % mod.m
+    assert tr.cpa_sum < 2 ** (mod.n + 2)      # datapath width claim
+    assert tr.carry_out in (0, 1)
+
+
+def test_sub_and_negate():
+    mod = Modulus(n=8, delta=9, sign=+1)
+    for a, b in [(0, 0), (1, 2), (200, 100), (264, 1)]:
+        assert submod_twit(a, b, mod) == (a - b) % mod.m
+    assert negate_twit(0, mod).value == 0
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(3, 12), st.data())
+def test_property(n, data):
+    delta = data.draw(st.integers(0, 2 ** (n - 1) - 1))
+    sign = data.draw(st.sampled_from([+1, -1]))
+    mod = Modulus(n=n, delta=delta, sign=sign)
+    a = data.draw(st.integers(0, mod.m - 1))
+    b = data.draw(st.integers(0, mod.m - 1))
+    assert addmod_twit(a, b, mod) == (a + b) % mod.m
+    assert submod_twit(a, b, mod) == (a - b) % mod.m

@@ -1,0 +1,112 @@
+"""The proposed multiplier (paper Alg. 1): correctness + structure claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.modmul import (StageTrace, group_weight, mulmod_twit,
+                               mulmod_twit_np, num_groups, pp_tables,
+                               reduction_levels, split_operand)
+from repro.core.twit import Modulus, TwitOperand, admissible_deltas
+
+
+def test_example_3_fig3():
+    """Worked examples of Fig. 3: |42·21|_47 = 36 and |12·4|_17 = 14."""
+    assert mulmod_twit(42, 21, Modulus(5, 15, +1)) == 36
+    assert mulmod_twit(12, 4, Modulus(5, 15, -1)) == 14
+
+
+def test_gamma_formula():
+    """Γ = 1 + ⌈(n−2)/3⌉ (paper §IV-C ①); n=5 ⇒ Γ=2 (§IV-D)."""
+    assert num_groups(5) == 2
+    assert num_groups(8) == 3
+    assert num_groups(11) == 4
+    assert num_groups(3) == 2
+
+
+def test_group_weights():
+    assert group_weight(0) == 1
+    assert group_weight(1) == 2 ** 2        # bits start at position 2
+    assert group_weight(2) == 2 ** 5
+
+
+@pytest.mark.parametrize("sign", [+1, -1])
+@pytest.mark.parametrize("delta", list(admissible_deltas(5)))
+def test_exhaustive_n5_vectorized(delta, sign):
+    """Exhaustive over every residue pair, every admissible δ, both signs —
+    the paper's full generic range for the n=5 case study."""
+    mod = Modulus(n=5, delta=delta, sign=sign)
+    a, b = np.meshgrid(np.arange(mod.m), np.arange(mod.m))
+    got = mulmod_twit_np(a.ravel(), b.ravel(), mod)
+    assert np.array_equal(got, (a.ravel() * b.ravel()) % mod.m)
+
+
+@pytest.mark.parametrize("sign", [+1, -1])
+@pytest.mark.parametrize("delta", [0, 3, 15])
+def test_scalar_model_subset(delta, sign):
+    if delta == 0 and sign == -1:
+        pytest.skip("2^n-0 == 2^n+0")
+    mod = Modulus(n=5, delta=delta, sign=sign)
+    for a in range(0, mod.m, 3):
+        for b in range(0, mod.m, 5):
+            assert mulmod_twit(a, b, mod) == (a * b) % mod.m
+
+
+@pytest.mark.parametrize("n,delta", [(8, 3), (8, 9), (8, 127),
+                                     (11, 3), (11, 9), (11, 1023)])
+@pytest.mark.parametrize("sign", [+1, -1])
+def test_larger_widths(n, delta, sign):
+    """Table III representative offsets for n=8 and n=11."""
+    mod = Modulus(n=n, delta=delta, sign=sign)
+    rng = np.random.default_rng(n * delta * (2 + sign))
+    a = rng.integers(0, mod.m, 4000)
+    b = rng.integers(0, mod.m, 4000)
+    assert np.array_equal(mulmod_twit_np(a, b, mod), (a * b) % mod.m)
+
+
+def test_stage_structure():
+    """White-box: Γ² partial products, each < m; squeeze bounded; trace."""
+    mod = Modulus(n=8, delta=9, sign=+1)
+    tr = StageTrace()
+    out = mulmod_twit(200, 123, mod, trace=tr)
+    assert out == (200 * 123) % mod.m
+    g = num_groups(8)
+    assert len(tr.partial_products) == g * g
+    assert all(0 <= p < mod.m for p in tr.partial_products)
+    assert len(tr.groups_a) == g
+    # stage-4 output is a valid codeword
+    assert 0 <= tr.final_bin < 2 ** 8 and tr.final_twit in (0, 1)
+
+
+def test_pp_tables_are_lut6():
+    """Each PP block is a 64-entry table (6-input Boolean function image)."""
+    mod = Modulus(n=5, delta=15, sign=+1)
+    tabs = pp_tables(mod)
+    assert tabs.count == num_groups(5) ** 2
+    for t in tabs.tables.values():
+        assert t.shape == (64,)
+        assert t.max() < mod.m
+
+
+def test_reduction_levels():
+    """λ = ⌈log_{3/2}(Γ²/2)⌉ (paper §IV-C ③)."""
+    assert reduction_levels(5) == 2          # Γ²=4 → ⌈log1.5 2⌉ = 2
+    assert reduction_levels(11) == 6         # Γ²=16 → ⌈log1.5 8⌉ = 6
+
+
+def test_twit_operand_inputs():
+    """The multiplier accepts redundant (non-canonical) codewords."""
+    mod = Modulus(n=5, delta=5, sign=-1)
+    a = TwitOperand(bin=21, twit=1, mod=mod)   # redundant form of 16
+    assert a.value == 16
+    assert mulmod_twit(a, 3, mod) == (16 * 3) % mod.m
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(3, 13), st.data())
+def test_property_random_widths(n, data):
+    delta = data.draw(st.integers(0, 2 ** (n - 1) - 1))
+    sign = data.draw(st.sampled_from([+1, -1]))
+    mod = Modulus(n=n, delta=delta, sign=sign)
+    a = data.draw(st.integers(0, mod.m - 1))
+    b = data.draw(st.integers(0, mod.m - 1))
+    assert mulmod_twit(a, b, mod) == (a * b) % mod.m

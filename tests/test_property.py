@@ -1,0 +1,88 @@
+"""Cross-cutting system invariants (hypothesis property tests).
+
+These tie the layers together: the twit datapath is a ring homomorphism,
+RNS forward conversion commutes with arithmetic, the fused kernel modes
+agree, and quantization error is bounded — the invariants the whole
+framework rests on.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.modadd import addmod_twit
+from repro.core.modmul import mulmod_twit
+from repro.core.rns import paper_n5_basis
+from repro.core.twit import Modulus
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(4, 11), st.data())
+def test_ring_homomorphism(n, data):
+    """Twit ops form a ring: distributivity and associativity hold through
+    the hardware datapaths (not just plain ints)."""
+    delta = data.draw(st.integers(1, 2 ** (n - 1) - 1))
+    sign = data.draw(st.sampled_from([+1, -1]))
+    mod = Modulus(n=n, delta=delta, sign=sign)
+    a = data.draw(st.integers(0, mod.m - 1))
+    b = data.draw(st.integers(0, mod.m - 1))
+    c = data.draw(st.integers(0, mod.m - 1))
+    left = mulmod_twit(a, addmod_twit(b, c, mod), mod)
+    right = addmod_twit(mulmod_twit(a, b, mod), mulmod_twit(a, c, mod), mod)
+    assert left == right
+    assert mulmod_twit(mulmod_twit(a, b, mod), c, mod) == \
+        mulmod_twit(a, mulmod_twit(b, c, mod), mod)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**62), st.integers(0, 2**62))
+def test_crt_is_a_homomorphism(x, y):
+    """forward(x·y) == channelwise twit-multiply of forward(x), forward(y)."""
+    basis = paper_n5_basis()
+    rx = basis.forward(x)
+    ry = basis.forward(y)
+    prod_res = []
+    for ch, a, b in zip(basis.channels, rx, ry):
+        if ch is None:                     # 2^10 channel: mask multiply
+            prod_res.append((int(a) * int(b)) % 1024)
+        else:
+            prod_res.append(mulmod_twit(int(a), int(b), ch))
+    assert basis.to_int(prod_res) == (x * y) % basis.M
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(16, 512), st.data())
+def test_fused_kernel_modes_agree(K, data):
+    """signed_a (broadcast-operand) kernel == per-channel-residue kernel."""
+    import jax.numpy as jnp
+    from repro.kernels import rns_matmul
+    moduli = (47, 43, 41)
+    rng = np.random.default_rng(K)
+    M, N = 8, 8
+    x = rng.integers(-127, 128, (M, K)).astype(np.int8)
+    w = rng.integers(-127, 128, (K, N)).astype(np.int64)
+    a_res = np.stack([np.mod(x.astype(np.int64), m) for m in moduli]).astype(np.int8)
+    a_raw = np.stack([x] * len(moduli))
+    b_res = np.stack([np.mod(w, m) for m in moduli]).astype(np.int8)
+    y1 = np.asarray(rns_matmul(jnp.asarray(a_res), jnp.asarray(b_res), moduli,
+                               block_m=8, block_n=8, block_k=16))
+    y2 = np.asarray(rns_matmul(jnp.asarray(a_raw), jnp.asarray(b_res), moduli,
+                               block_m=8, block_n=8, block_k=16,
+                               signed_a=True))
+    assert np.array_equal(y1, y2)
+    want = np.stack([np.mod(x.astype(np.int64) @ w, m) for m in moduli])
+    assert np.array_equal(y1, want)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.data())
+def test_quantization_error_bound(data):
+    import jax.numpy as jnp
+    from repro.core.quant import dequantize, quantize_int8
+    rows = data.draw(st.integers(1, 8))
+    cols = data.draw(st.integers(2, 64))
+    scale_mag = data.draw(st.floats(1e-3, 1e3))
+    x = np.random.default_rng(rows * cols).standard_normal(
+        (rows, cols)).astype(np.float32) * scale_mag
+    q, s = quantize_int8(jnp.asarray(x))
+    err = np.abs(np.asarray(dequantize(q, s)) - x)
+    assert (err <= np.asarray(s) * 0.5 + 1e-6).all()

@@ -1,0 +1,87 @@
+"""RNS bases (paper §II-A, §IV-D case study)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rns import (PAPER_N5_DYNAMIC_RANGE, PAPER_N5_MODULI, RNSBasis,
+                            basis_for_accumulation, n8_channels, n11_channels,
+                            paper_n5_basis, tau_basis)
+
+
+def test_case_study_dynamic_range():
+    """§IV-D: M = 28,620,324,425,937,054,720 ≈ 2^65 — exact value."""
+    b = paper_n5_basis()
+    assert b.M == PAPER_N5_DYNAMIC_RANGE
+    assert b.M.bit_length() == 65
+    assert b.k == 12
+
+
+def test_case_study_deltas():
+    """§IV-D: δ ∈ {1,3,5,7,9,11,13,15} and δ ≤ 2^(n−1)−1 = 15."""
+    deltas = set()
+    for ch in paper_n5_basis().channels:
+        if ch is not None:
+            assert ch.n == 5
+            assert ch.delta <= 15
+            deltas.add(ch.delta)
+    assert deltas == {1, 3, 5, 7, 9, 11, 13, 15}
+
+
+def test_pairwise_coprime():
+    ms = PAPER_N5_MODULI
+    for i in range(len(ms)):
+        for j in range(i + 1, len(ms)):
+            assert math.gcd(ms[i], ms[j]) == 1
+
+
+def test_crt_mrc_roundtrip():
+    b = paper_n5_basis()
+    for x in [0, 1, 12345, 2**63 - 1, b.M - 1, 31415926535897932]:
+        r = [int(v) for v in b.forward(x)]
+        assert b.to_int(r) == x
+        assert b.from_mrc(b.mrc_digits(r)) == x
+
+
+def test_signed_embedding():
+    b = paper_n5_basis()
+    for x in [-1, -12345, -(b.M // 2) + 1, 42]:
+        r = [int(v) for v in b.forward(x)]
+        assert b.to_signed(r) == x
+
+
+def test_tau_set():
+    """Table II baseline: τ = {2^22−1, 2^22, 2^22+1}."""
+    t = tau_basis(22)
+    assert t.M == (2**22 - 1) * 2**22 * (2**22 + 1)
+    r = [int(v) for v in t.forward(99999999)]
+    assert t.to_int(r) == 99999999
+
+
+def test_table3_channels():
+    assert [c.m for c in n8_channels()] == [253, 259, 247, 265, 129, 383]
+    assert [c.m for c in n11_channels()] == [2045, 2051, 2039, 2057, 1025,
+                                             3071]
+
+
+def test_basis_for_accumulation_bounds():
+    for k_dim in (64, 1024, 8192, 65536):
+        max_abs = k_dim * 127 * 127
+        b = basis_for_accumulation(max_abs)
+        assert b.M > 2 * max_abs
+        assert all(m <= 47 for m in b.moduli)      # int8-safe residues
+
+
+def test_non_coprime_rejected():
+    with pytest.raises(ValueError):
+        RNSBasis(name="bad", moduli=(6, 9))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, PAPER_N5_DYNAMIC_RANGE - 1))
+def test_crt_bijective_property(x):
+    b = paper_n5_basis()
+    r = [int(v) for v in b.forward(x)]
+    assert b.to_int(r) == x
+    assert b.from_mrc(b.mrc_digits(r)) == x

@@ -1,0 +1,85 @@
+"""RNS integer matmul layer — the paper's technique as a framework feature."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import dequantize, quantize_int8
+from repro.core.rns_linear import reconstruct_mrc, rns_dense, rns_int_matmul
+from repro.core.rns import basis_for_accumulation
+
+
+@pytest.mark.parametrize("M,K,N", [(4, 32, 8), (8, 512, 16), (3, 8192, 5)])
+def test_exactness_vs_int64(M, K, N):
+    """The RNS path reproduces the int8 matmul exactly (paper's claim that
+    modular channels preserve full integer arithmetic)."""
+    rng = np.random.default_rng(K)
+    xq = rng.integers(-127, 128, (M, K)).astype(np.int8)
+    wq = rng.integers(-127, 128, (K, N)).astype(np.int8)
+    got = np.asarray(rns_int_matmul(jnp.asarray(xq), jnp.asarray(wq)))
+    want = xq.astype(np.int64) @ wq.astype(np.int64)
+    if np.all(np.abs(want) < 2**24):
+        assert np.array_equal(got.astype(np.int64), want)
+    else:
+        assert np.allclose(got, want.astype(np.float64), rtol=2e-7)
+
+
+def test_reconstruct_signed():
+    basis = basis_for_accumulation(10_000)
+    vals = np.array([-9999, -1, 0, 1, 4242, 9999], dtype=np.int64)
+    res = jnp.stack([jnp.asarray(np.mod(vals, m).astype(np.int32))
+                     for m in basis.moduli])
+    got = np.asarray(reconstruct_mrc(res, basis))
+    assert np.array_equal(got.astype(np.int64), vals)
+
+
+def test_rns_dense_matches_quantized_oracle():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 256)).astype(np.float32)
+    w = rng.standard_normal((256, 32)).astype(np.float32)
+    y = np.asarray(rns_dense(jnp.asarray(x), jnp.asarray(w)))
+    xq, sx = quantize_int8(jnp.asarray(x), axis=-1)
+    wq, sw = quantize_int8(jnp.asarray(w), axis=0)
+    oracle = (np.asarray(xq).astype(np.int64) @ np.asarray(wq).astype(np.int64)
+              ) * np.asarray(sx) * np.asarray(sw)
+    assert np.max(np.abs(y - oracle)) < 1e-4
+
+
+def test_rns_dense_quant_error_reasonable():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((16, 512)).astype(np.float32)
+    w = rng.standard_normal((512, 64)).astype(np.float32)
+    y = np.asarray(rns_dense(jnp.asarray(x), jnp.asarray(w)))
+    ref = x @ w
+    rel = np.abs(y - ref).max() / np.abs(ref).max()
+    assert rel < 0.05                        # int8 QAT regime
+
+
+def test_straight_through_gradients():
+    x = jnp.ones((4, 64), jnp.float32)
+    w = jnp.full((64, 8), 0.5, jnp.float32)
+    gx, gw = jax.grad(lambda x, w: jnp.sum(rns_dense(x, w)),
+                      argnums=(0, 1))(x, w)
+    # STE: grads are the dense-matmul grads
+    assert np.allclose(np.asarray(gx), np.full((4, 64), 0.5 * 8), atol=1e-5)
+    assert np.allclose(np.asarray(gw), np.full((64, 8), 4.0), atol=1e-5)
+
+
+def test_quantize_bounds():
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((8, 128)) * 10)
+    q, s = quantize_int8(x, axis=-1)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+    err = jnp.abs(dequantize(q, s) - x.astype(jnp.float32))
+    assert float(jnp.max(err)) <= float(jnp.max(s)) * 0.5 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(8, 2048), st.integers(1, 6), st.integers(1, 6))
+def test_exactness_property(K, M, N):
+    rng = np.random.default_rng(K * M * N)
+    xq = rng.integers(-127, 128, (M, K)).astype(np.int8)
+    wq = rng.integers(-127, 128, (K, N)).astype(np.int8)
+    got = np.asarray(rns_int_matmul(jnp.asarray(xq), jnp.asarray(wq)))
+    want = xq.astype(np.int64) @ wq.astype(np.int64)
+    assert np.allclose(got, want.astype(np.float64), rtol=2e-7, atol=0.5)

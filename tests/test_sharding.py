@@ -1,0 +1,120 @@
+"""Sharding policy rules + dry-run integration (subprocess with 32 devices)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.inputs import abstract_cache, abstract_params, input_specs
+from repro.launch.mesh import dp_axes, make_host_mesh
+from repro.launch.sharding import (batch_specs, cache_specs, mode_for,
+                                   param_specs)
+
+
+class FakeMesh:
+    """Shape-only stand-in (rule tests need no real devices)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_tp_rules():
+    cfg = get_config("smollm-135m")
+    specs = param_specs(MESH, cfg, abstract_params(cfg), "tp")
+    blocks = specs["blocks"]["sub0"]
+    assert blocks["attn"]["wq"] == P(None, None, "model")
+    assert blocks["attn"]["wo"] == P(None, "model", None)
+    assert blocks["mlp"]["w_gate"] == P(None, None, "model")
+    assert blocks["mlp"]["w_down"] == P(None, "model", None)
+    assert specs["embed"] == P("model", None)        # 49152 % 16 == 0
+    assert blocks["norm_mix"] == P(None, None)       # (L, d) stacked, replic.
+
+
+def test_fsdp_rules():
+    cfg = get_config("yi-34b")
+    specs = param_specs(MESH, cfg, abstract_params(cfg), "fsdp_tp")
+    blocks = specs["blocks"]["sub0"]
+    assert blocks["attn"]["wq"] == P(None, ("data",), "model")
+    assert blocks["mlp"]["w_down"] == P(None, "model", ("data",))
+
+
+def test_moe_expert_parallel():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    specs = param_specs(MESH, cfg, abstract_params(cfg), "fsdp_tp")
+    moe = specs["blocks"]["sub1"]["moe"]
+    assert moe["w_gate"] == P(None, "model", ("data",), None)   # E over model
+    assert moe["router"] == P(None, None, None)
+
+
+def test_odd_vocab_fallback():
+    """hymba's vocab 32001 can't shard 16 ways: falls back to d-sharding."""
+    cfg = get_config("hymba-1.5b")
+    specs = param_specs(MESH, cfg, abstract_params(cfg), "tp")
+    assert specs["embed"] == P(None, "model")        # (V, d): d sharded
+
+
+def test_optimizer_state_inherits():
+    from repro.train.optimizer import make_optimizer
+    cfg = get_config("smollm-135m")
+    pa = abstract_params(cfg)
+    opt = make_optimizer(cfg)
+    oa = jax.eval_shape(opt.init, pa)
+    specs = param_specs(MESH, cfg, oa, "tp")
+    assert specs["m"]["blocks"]["sub0"]["attn"]["wq"] == P(None, None, "model")
+
+
+def test_cache_specs_sequence_sharded():
+    cfg = get_config("yi-34b")
+    cache = abstract_cache(cfg, 128, 32768)
+    specs = cache_specs(MESH, cfg, cache)
+    assert specs["sub0"]["k"] == P(None, ("data",), "model", None, None)
+
+
+def test_batch_specs_divisibility():
+    cfg = get_config("mamba2-1.3b")
+    b = input_specs(cfg, SHAPES["train_4k"])
+    specs = batch_specs(MESH, cfg, b)
+    assert specs["tokens"] == P(("data",), None)
+    b1 = input_specs(cfg, SHAPES["long_500k"])
+    specs1 = batch_specs(MESH, cfg, b1)
+    assert specs1["tokens"] == P(None, None)          # B=1 unshardable
+
+
+def test_mode_for_size_threshold():
+    assert mode_for(get_config("smollm-135m")) == "tp"
+    assert mode_for(get_config("yi-34b")) == "fsdp_tp"
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_cell():
+    """End-to-end dry-run of one cell in a fresh interpreter (512 devices)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = "/tmp/pytest_dryrun.jsonl"
+    if os.path.exists(out):
+        os.remove(out)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "smollm-135m",
+         "--shape", "decode_32k", "--out", out],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.loads(open(out).read().strip().split("\n")[-1])
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["n_devices"] == 256
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,93 @@
+"""Twit representation (paper §IV-A): codec, redundancy, worked Example 2."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.twit import (Modulus, TwitOperand, admissible_deltas,
+                             all_codewords, decode, encode, encode_all_forms)
+
+
+def test_example_2_minus():
+    # mod (2^5 - 5) = 27: 16 is 100000 and 101011 (bin 10101=21, twit -5)
+    m = Modulus(n=5, delta=5, sign=-1)
+    forms = encode_all_forms(16, m)
+    assert (16, 0) in forms and (21, 1) in forms
+    assert decode(21, 1, m) == 16
+
+
+def test_example_2_plus():
+    # mod (2^5 + 5) = 37: 16 is 100000 and 010111 (bin 01011=11, twit +5)
+    m = Modulus(n=5, delta=5, sign=+1)
+    forms = encode_all_forms(16, m)
+    assert (16, 0) in forms and (11, 1) in forms
+    assert decode(11, 1, m) == 16
+
+
+@pytest.mark.parametrize("sign", [+1, -1])
+@pytest.mark.parametrize("delta", list(admissible_deltas(5)))
+def test_roundtrip_exhaustive_n5(delta, sign):
+    mod = Modulus(n=5, delta=delta, sign=sign)
+    for v in range(mod.m):
+        b, t = encode(v, mod)
+        assert decode(b, t, mod) == v
+        assert 0 <= b < 2**5 and t in (0, 1)
+
+
+@pytest.mark.parametrize("sign", [+1, -1])
+@pytest.mark.parametrize("delta", [1, 7, 15])
+def test_all_codewords_valid(delta, sign):
+    """§IV-A: every one of the 2^(n+1) codewords decodes to a residue."""
+    mod = Modulus(n=5, delta=delta, sign=sign)
+    seen = set()
+    for cw in all_codewords(mod):
+        assert 0 <= cw.value < mod.m
+        seen.add(cw.value)
+    assert seen == set(range(mod.m))          # codec is onto
+
+
+def test_redundancy_structure():
+    """§IV-A: every residue has ≥1 codeword; redundancy is conserved
+    (Σ_v #forms(v) = 2^(n+1)); for 2^n−δ *every* residue admits more than
+    one equivalent representation-form family, for 2^n+δ only a subset."""
+    minus = Modulus(n=5, delta=9, sign=-1)
+    plus = Modulus(n=5, delta=9, sign=+1)
+    for mod in (minus, plus):
+        counts = [len(encode_all_forms(v, mod)) for v in range(mod.m)]
+        assert min(counts) >= 1
+        assert sum(counts) == 2 ** 6          # all codewords decode somewhere
+    multi_minus = sum(len(encode_all_forms(v, minus)) > 1
+                      for v in range(minus.m))
+    multi_plus = sum(len(encode_all_forms(v, plus)) > 1
+                     for v in range(plus.m))
+    # minus: 64 codewords over 23 residues ⇒ redundancy everywhere
+    assert multi_minus == minus.m
+    # plus: 64 codewords over 41 residues ⇒ only a subset is redundant
+    assert 0 < multi_plus < plus.m
+
+
+def test_admissible_range_enforced():
+    with pytest.raises(ValueError):
+        Modulus(n=5, delta=16, sign=-1)       # > 2^(n-1) − 1
+    Modulus(n=5, delta=15, sign=-1)           # boundary OK
+
+
+def test_from_value():
+    m = Modulus.from_value(47)
+    assert (m.n, m.delta, m.sign) == (5, 15, +1)
+    # free factoring prefers the smallest δ: 17 = 2^4 + 1
+    m = Modulus.from_value(17)
+    assert (m.n, m.delta, m.sign) == (4, 1, +1)
+    # the case study forces the n=5 channel width: 17 = 2^5 − 15
+    m = Modulus.from_value(17, n=5)
+    assert (m.n, m.delta, m.sign) == (5, 15, -1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(3, 12), st.data())
+def test_roundtrip_property(n, data):
+    delta = data.draw(st.integers(0, 2 ** (n - 1) - 1))
+    sign = data.draw(st.sampled_from([+1, -1]))
+    mod = Modulus(n=n, delta=delta, sign=sign)
+    v = data.draw(st.integers(0, mod.m - 1))
+    b, t = encode(v, mod)
+    assert decode(b, t, mod) == v
