@@ -3,8 +3,13 @@
 Measures (CPU, jit'd jnp — relative numbers transfer to the roofline
 analysis, absolute ones are host-CPU):
 
-  * rns_int8   — the paper's datapath: residue channels + deferred fold +
-                 MRC reconstruction (core/rns_linear.rns_int_matmul)
+  * rns_jnp    — the paper's datapath through the fused-XLA backend:
+                 residue channels + deferred fold + MRC reconstruction
+                 (core/channel_plan dispatch, backend="jnp")
+  * rns_pallas — the same datapath through the Pallas kernels
+                 (backend="pallas"; interpret mode off-TPU, so off-TPU the
+                 number tracks kernel-interpreter overhead, on TPU the
+                 actual shipped hot path)
   * int32      — direct int32 matmul (what the RNS path replaces exactly)
   * bf16       — the throughput ceiling XLA gives floating matmuls
 
@@ -14,6 +19,7 @@ the RNS path reproduces the int64 oracle.
 """
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -23,17 +29,21 @@ import numpy as np
 from repro.core.rns_linear import rns_int_matmul
 
 SHAPES = [(64, 512, 64), (128, 2048, 128)]
+# Pallas-interpret is python-per-grid-cell off-TPU: bench the small shape
+# there, every shape when the kernels compile natively.
+PALLAS_SHAPES = SHAPES if jax.default_backend() == "tpu" else SHAPES[:1]
 
 
 def _time(fn, *args, reps: int = 5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    """Best-of-reps µs plus the warmup result (so exactness checks don't
+    re-execute the kernel — relevant off-TPU where Pallas interprets)."""
+    out = jax.block_until_ready(fn(*args))                 # warmup / compile
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+    return best * 1e6, out
 
 
 def run():
@@ -45,26 +55,35 @@ def run():
         xf = xq.astype(jnp.bfloat16)
         wf = wq.astype(jnp.bfloat16)
 
-        rns = jax.jit(rns_int_matmul)
+        rns_jnp = jax.jit(functools.partial(rns_int_matmul, backend="jnp"))
+        rns_pal = jax.jit(functools.partial(rns_int_matmul, backend="pallas"))
         i32 = jax.jit(lambda a, b: jax.lax.dot_general(
             a.astype(jnp.int32), b.astype(jnp.int32),
             (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32))
         bf = jax.jit(lambda a, b: a @ b)
 
-        t_rns = _time(rns, xq, wq)
-        t_i32 = _time(i32, xq, wq)
-        t_bf = _time(bf, xf, wf)
+        t_jnp, got = _time(rns_jnp, xq, wq)
+        t_i32, _ = _time(i32, xq, wq)
+        t_bf, _ = _time(bf, xf, wf)
 
-        got = np.asarray(rns(xq, wq))
         want = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
-        exact = bool(np.allclose(got, want.astype(np.float64), rtol=2e-7))
+        exact = bool(np.allclose(np.asarray(got), want.astype(np.float64),
+                                 rtol=2e-7))
 
         tag = f"M{M}K{K}N{N}"
-        print(f"# {tag}: rns={t_rns:.0f}us int32={t_i32:.0f}us "
-              f"bf16={t_bf:.0f}us exact={exact} "
-              f"rns_overhead_vs_int32={t_rns / t_i32:.1f}x")
-        rows.append((f"rns_matmul_{tag}", t_rns,
-                     f"exact={exact},vs_int32={t_rns / t_i32:.2f}x"))
+        line = (f"# {tag}: rns_jnp={t_jnp:.0f}us int32={t_i32:.0f}us "
+                f"bf16={t_bf:.0f}us exact={exact} "
+                f"rns_overhead_vs_int32={t_jnp / t_i32:.1f}x")
+        rows.append((f"rns_matmul_jnp_{tag}", t_jnp,
+                     f"exact={exact},vs_int32={t_jnp / t_i32:.2f}x"))
+        if (M, K, N) in PALLAS_SHAPES:
+            t_pal, got_pal = _time(rns_pal, xq, wq, reps=3)
+            pal_exact = bool(np.allclose(np.asarray(got_pal),
+                                         want.astype(np.float64), rtol=2e-7))
+            line += f" rns_pallas={t_pal:.0f}us pallas_exact={pal_exact}"
+            rows.append((f"rns_matmul_pallas_{tag}", t_pal,
+                         f"exact={pal_exact},vs_jnp={t_pal / t_jnp:.2f}x"))
+        print(line)
         rows.append((f"int32_matmul_{tag}", t_i32, ""))
         rows.append((f"bf16_matmul_{tag}", t_bf, ""))
     return rows

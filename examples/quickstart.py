@@ -51,3 +51,12 @@ wq = jnp.asarray(rng.integers(-127, 128, (2048, 8)), jnp.int8)
 y = rns_int_matmul(xq, wq)
 oracle = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
 print("RNS matmul exact:", bool(np.allclose(np.asarray(y), oracle)))
+
+# --- 5. backend dispatch: fused XLA vs the Pallas kernels --------------------
+# One ChannelPlan (core/channel_plan) precomputes the Stage-④ fold ladders;
+# backend="jnp"|"pallas"|"auto" picks the execution engine.  Off-TPU the
+# kernel runs its bit-exact interpreter; on TPU it compiles natively.
+y_jnp = rns_int_matmul(xq, wq, backend="jnp")
+y_pal = rns_int_matmul(xq, wq, backend="pallas")
+print("jnp and Pallas backends bit-identical:",
+      bool((np.asarray(y_jnp) == np.asarray(y_pal)).all()))

@@ -71,7 +71,9 @@ class ModelConfig:
     tie_embeddings: bool = False
 
     # --- framework ---------------------------------------------------------------
-    linear_backend: str = "bf16"          # bf16 | rns_int8  (the paper's path)
+    # bf16 | rns_int8[:auto|jnp|pallas] — the paper's residue path, with an
+    # optional Stage-④ engine suffix (core/channel_plan backend dispatch).
+    linear_backend: str = "bf16"
     param_dtype: str = "bfloat16"
     remat: bool = True
     remat_policy: str = "full"   # full | save_ar (keep TP-AR outputs) | none

@@ -23,4 +23,18 @@ def smoke() -> ModelConfig:
                                linear_backend="rns_int8")
 
 
+def full_pallas() -> ModelConfig:
+    """Same arch, Stage-④ forced onto the Pallas kernels (TPU serving cell)."""
+    return dataclasses.replace(smollm_135m.full(),
+                               name="rns-smollm-135m-pallas",
+                               linear_backend="rns_int8:pallas")
+
+
+def smoke_pallas() -> ModelConfig:
+    return dataclasses.replace(smollm_135m.smoke(),
+                               name="rns-smollm-smoke-pallas",
+                               linear_backend="rns_int8:pallas")
+
+
 register("rns-smollm-135m", full, smoke)
+register("rns-smollm-135m-pallas", full_pallas, smoke_pallas)

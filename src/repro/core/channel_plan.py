@@ -1,0 +1,341 @@
+"""ChannelPlan: the single source of truth for the Stage-④ fold datapath.
+
+The paper's central organizational idea — defer every carry propagation and
+run exactly one fold ladder per result (Stage ③/④) — used to be re-derived at
+each call site (both Pallas kernels, the jnp oracles, and twice inside the
+RNS linear layer).  A :class:`ChannelPlan` reifies it once: for a given
+``(moduli, bound)`` pair it precomputes and caches everything the Stage-④
+epilogue needs (DESIGN.md §5):
+
+  * per-channel fold-ladder rungs (``core.folding.fold_schedule``), padded to
+    a common rung count with provable no-op pad rungs so the schedule is a
+    rectangular table streamable into a kernel;
+  * the shared conditional-subtract count ``n_sub``;
+  * per-channel :class:`~repro.core.twit.Modulus` descriptors (the 2^n±δ
+    twit datapaths; ``None`` for reduction-free power-of-two channels);
+  * signed-operand (broadcast) metadata: whether the accumulator may go
+    negative, and the int32-overflow validation for the matching bound;
+  * residue dtype selection (int8 when every residue fits the MXU operand
+    registers, int32 otherwise).
+
+``ChannelPlan.apply_ladder`` is THE fold ladder — the only implementation in
+the repository.  It runs in two modes:
+
+  * ``plan.apply_ladder(x, c)`` — static schedule of channel ``c`` baked at
+    trace time (jnp paths, oracles);
+  * ``plan.apply_ladder(x, sched=rows, m=mod)`` — traced schedule rows, used
+    inside Pallas kernel bodies where the rungs arrive through a Ref.
+
+On top of the plan sits the backend-dispatch layer (DESIGN.md §7):
+:func:`matmul`, :func:`matmul_broadcast` and :func:`modmul` accept
+``backend="auto"|"jnp"|"pallas"`` and route to either the fused-XLA path or
+the Pallas kernels, with device-aware ``interpret`` selection (compiled on
+TPU, interpreter everywhere else) instead of a hardcoded ``interpret=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .folding import INT32_SAFE, fold_schedule, max_subtracts
+from .twit import Modulus, is_power_of_two
+
+__all__ = [
+    "ChannelPlan",
+    "BACKENDS",
+    "resolve_backend",
+    "resolve_interpret",
+    "matmul",
+    "matmul_broadcast",
+    "modmul",
+]
+
+BACKENDS = ("auto", "jnp", "pallas")
+
+# A pad rung (30, 0) is a provable no-op: every post-ladder value is < 4m <
+# 2^30, so ``v & (2^30 - 1)`` keeps it intact and the hi term contributes 0.
+_PAD_RUNG = (30, 0)
+
+
+# --------------------------------------------------------------- dispatch ---
+def resolve_backend(backend: str) -> str:
+    """``auto`` → Pallas on TPU (native compile), fused XLA elsewhere."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend != "auto":
+        return backend
+    import jax
+
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Device-aware interpret selection: compile natively on TPU, run the
+    kernel-body interpreter (bit-exact, CPU/GPU-safe) everywhere else."""
+    if interpret is not None:
+        return bool(interpret)
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------------- plan ---
+@dataclasses.dataclass(frozen=True)
+class ChannelPlan:
+    """Frozen, hashable Stage-④ plan for one ``(moduli, bound)`` pair.
+
+    Hashability matters: plans ride through ``jax.jit`` static arguments and
+    into Pallas kernel closures, so equality/hash are derived purely from the
+    precomputed fields.
+    """
+
+    moduli: Tuple[int, ...]
+    channels: Tuple[Optional[Modulus], ...]
+    bound: int
+    rungs: Tuple[Tuple[Tuple[int, int], ...], ...]   # (C, R, 2), padded
+    n_sub: int
+    signed: bool = False
+
+    # ------------------------------------------------------------- builders -
+    @classmethod
+    def build(cls, moduli: Sequence[int], bound: int, *,
+              signed: bool = False, max_rungs: int = 6) -> "ChannelPlan":
+        """Plan for arbitrary int32 accumulators in [-bound, bound] (signed)
+        or [0, bound] (unsigned).  Raises on int32 overflow — the "bound
+        lemma" is checked at construction, never at run time."""
+        mods = tuple(int(m) for m in moduli)
+        chans = tuple(None if is_power_of_two(m) else Modulus.from_value(m)
+                      for m in mods)
+        return _build_plan(mods, chans, int(bound), bool(signed),
+                           int(max_rungs))
+
+    @classmethod
+    def for_channels(cls, channels: Sequence[Modulus], bound: int, *,
+                     signed: bool = False,
+                     max_rungs: int = 6) -> "ChannelPlan":
+        """Plan over explicit :class:`Modulus` descriptors (honours a forced
+        channel width n, e.g. the paper's all-n=5 case study)."""
+        chans = tuple(channels)
+        mods = tuple(ch.m for ch in chans)
+        chans = tuple(None if ch.is_pow2 else ch for ch in chans)
+        return _build_plan(mods, chans, int(bound), bool(signed),
+                           int(max_rungs))
+
+    @classmethod
+    def for_matmul(cls, moduli: Sequence[int], k: int, *,
+                   signed: bool = False) -> "ChannelPlan":
+        """Plan for a K-deep deferred-reduction matmul.
+
+        Unsigned (per-channel residues): |acc| ≤ K·max(m−1)².  Signed
+        (broadcast-operand mode, raw int8 activations): |acc| ≤
+        K·127·max(m−1) and the accumulator may be negative.
+        """
+        mods = tuple(int(m) for m in moduli)
+        if signed:
+            bound = int(k) * 127 * max(m - 1 for m in mods)
+        else:
+            bound = int(k) * max((m - 1) ** 2 for m in mods)
+        if bound > INT32_SAFE:
+            raise ValueError(
+                f"int32 accumulator overflow: K={k}, moduli={mods}, "
+                f"bound={bound} >= 2^31")
+        return cls.build(mods, bound, signed=signed)
+
+    @classmethod
+    def for_product(cls, moduli: Sequence[int]) -> "ChannelPlan":
+        """Plan for one elementwise residue product: bound = max(m−1)²."""
+        mods = tuple(int(m) for m in moduli)
+        return cls.build(mods, max((m - 1) ** 2 for m in mods))
+
+    # ----------------------------------------------------------- properties -
+    @property
+    def k(self) -> int:
+        return len(self.moduli)
+
+    @property
+    def num_rungs(self) -> int:
+        return len(self.rungs[0]) if self.rungs else 0
+
+    @functools.cached_property
+    def sched(self) -> np.ndarray:
+        """(C, R, 2) int32 rung table — the kernel-streamable form."""
+        return np.asarray(self.rungs, dtype=np.int32).reshape(
+            self.k, self.num_rungs, 2)
+
+    @functools.cached_property
+    def mods(self) -> np.ndarray:
+        return np.asarray(self.moduli, dtype=np.int32)
+
+    @functools.cached_property
+    def residue_dtype(self):
+        """int8 when every residue fits the MXU int8 operand registers."""
+        import jax.numpy as jnp
+
+        return jnp.int8 if max(self.moduli) <= 128 else jnp.int32
+
+    # ------------------------------------------------------------ datapath --
+    def forward(self, x):
+        """Binary → residues: (…,) int → (C, …) canonical residues."""
+        import jax.numpy as jnp
+
+        x32 = x.astype(jnp.int32)
+        return jnp.stack([jnp.mod(x32, m).astype(self.residue_dtype)
+                          for m in self.moduli], axis=0)
+
+    def apply_ladder(self, x, c: int | None = None, *, sched=None, m=None):
+        """THE Stage-④ fold ladder + bounded canonicalization.
+
+        ``plan.apply_ladder(x, c)`` bakes channel ``c``'s schedule statically;
+        ``plan.apply_ladder(x, sched=rows, m=mod)`` consumes traced rows
+        (Pallas kernel bodies).  Each rung applies the congruence
+        ``v = lo + hi·2^s ≡ lo + hi·|2^s|_m``; ``n_sub`` conditional
+        subtracts finish the canonicalization into [0, m).
+        """
+        import jax.numpy as jnp
+
+        if sched is None:
+            sched = self.sched[c]
+        if m is None:
+            m = jnp.int32(self.moduli[c])
+        for r in range(sched.shape[0]):
+            s = sched[r, 0]
+            cc = sched[r, 1]
+            mask = jnp.left_shift(jnp.int32(1), s) - 1
+            x = jnp.bitwise_and(x, mask) + jnp.right_shift(x, s) * cc
+        for _ in range(self.n_sub):
+            x = jnp.where(x >= m, x - m, x)
+        return x
+
+    def fold_signed(self, x, c: int | None = None, *, sched=None, m=None):
+        """Ladder for possibly-negative accumulators (broadcast-operand
+        mode): fold |x| and fix the sign via (−v) mod m = m − (v mod m)."""
+        import jax.numpy as jnp
+
+        if m is None:
+            m = jnp.int32(self.moduli[c])
+        neg = x < 0
+        r = self.apply_ladder(jnp.abs(x), c, sched=sched, m=m)
+        return jnp.where(neg & (r > 0), m - r, r)
+
+    def fold(self, x, c: int | None = None, *, sched=None, m=None):
+        """Signed-aware entry: dispatches on the plan's operand metadata."""
+        if self.signed:
+            return self.fold_signed(x, c, sched=sched, m=m)
+        return self.apply_ladder(x, c, sched=sched, m=m)
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"ChannelPlan(C={self.k}, bound=2^{self.bound.bit_length()}, "
+                f"rungs={self.num_rungs}, n_sub={self.n_sub}, "
+                f"signed={self.signed})")
+
+
+@functools.lru_cache(maxsize=1024)
+def _build_plan(moduli: Tuple[int, ...],
+                channels: Tuple[Optional[Modulus], ...],
+                bound: int, signed: bool, max_rungs: int) -> ChannelPlan:
+    if bound > INT32_SAFE:
+        raise ValueError(
+            f"bound {bound} exceeds the int32 accumulator range")
+    scheds = []
+    n_sub = 1
+    for m, ch in zip(moduli, channels):
+        if ch is None:                    # power-of-two: mask-only reduction
+            scheds.append([(int(np.log2(m)), 0)])
+            continue
+        sc = list(fold_schedule(bound, ch, target_multiple=4,
+                                max_rungs=max_rungs))
+        n_sub = max(n_sub, max_subtracts(bound, sc, m))
+        scheds.append(sc)
+    R = max(len(s) for s in scheds)
+    rungs = tuple(tuple(s) + (_PAD_RUNG,) * (R - len(s)) for s in scheds)
+    return ChannelPlan(moduli=moduli, channels=channels, bound=bound,
+                       rungs=rungs, n_sub=n_sub, signed=signed)
+
+
+# --------------------------------------------------- backend-dispatch ops ---
+def matmul(a_res, b_res, moduli, *, backend: str = "auto",
+           interpret: Optional[bool] = None, plan: ChannelPlan | None = None,
+           **block_kw):
+    """|A·B|_{m_c} per channel: (C,M,K) × (C,K,N) residues → (C,M,N) int32.
+
+    ``backend="pallas"`` routes to the tiled Pallas kernel
+    (`kernels/rns_matmul.py`); ``"jnp"`` runs per-channel MXU dots with the
+    same deferred Stage-④ epilogue; ``"auto"`` picks by device.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    moduli = tuple(int(m) for m in moduli)
+    if plan is not None and plan.moduli != moduli:
+        raise ValueError(
+            f"plan moduli {plan.moduli} do not match requested {moduli}")
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels.rns_matmul import rns_matmul
+
+        return rns_matmul(a_res, b_res, moduli, plan=plan,
+                          signed_a=plan.signed if plan is not None else False,
+                          interpret=resolve_interpret(interpret), **block_kw)
+    K = a_res.shape[-1]
+    plan = plan or ChannelPlan.for_matmul(moduli, K)
+    outs = []
+    for c in range(len(moduli)):
+        acc = jax.lax.dot_general(a_res[c], b_res[c], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        # plan.fold dispatches on the plan's signed metadata, exactly like
+        # the kernel epilogue — signed plans get |acc| + sign fix-up.
+        outs.append(plan.fold(acc, c))
+    return jnp.stack(outs, axis=0)
+
+
+def matmul_broadcast(x, w, moduli, *, backend: str = "auto",
+                     interpret: Optional[bool] = None, **block_kw):
+    """Broadcast-operand modular matmul: (M,K) raw signed int8 × (K,N) int8
+    weights → (C,M,N) canonical residues.
+
+    Σ_k x_k·w_k ≡ Σ_k x_k·|w_k|_m (mod m): the activation operand never needs
+    forward conversion — only the (often static) weights do.  The jnp backend
+    fuses all C channels into ONE int8 MXU matmul (M,K)×(K,C·N); the Pallas
+    backend streams a single (1,M,K) activation block shared by every channel
+    of the grid (`signed_a` epilogue).  Accumulators can be negative, so the
+    Stage-④ ladder runs on |acc| with a final sign fix-up.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    moduli = tuple(int(m) for m in moduli)
+    K, N = w.shape
+    plan = ChannelPlan.for_matmul(moduli, K, signed=True)
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels.rns_matmul import rns_matmul
+
+        b_res = plan.forward(w)                              # (C, K, N)
+        return rns_matmul(x[None], b_res, moduli, signed_a=True, plan=plan,
+                          interpret=resolve_interpret(interpret), **block_kw)
+    w_res = jnp.concatenate(
+        [jnp.mod(w.astype(jnp.int32), m).astype(plan.residue_dtype)
+         for m in moduli], axis=-1)                          # (K, C·N)
+    acc = jax.lax.dot_general(x, w_res, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)   # (M, C·N)
+    outs = [plan.fold_signed(acc[:, c * N:(c + 1) * N], c)
+            for c in range(len(moduli))]
+    return jnp.stack(outs, axis=0)
+
+
+def modmul(a_res, b_res, moduli, *, backend: str = "auto",
+           interpret: Optional[bool] = None, **block_kw):
+    """|a·b|_{m_c} elementwise over (C, S) residue planes."""
+    import jax.numpy as jnp
+
+    moduli = tuple(int(m) for m in moduli)
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels.rns_modmul import rns_modmul
+
+        return rns_modmul(a_res, b_res, moduli,
+                          interpret=resolve_interpret(interpret), **block_kw)
+    plan = ChannelPlan.for_product(moduli)
+    p = a_res.astype(jnp.int32) * b_res.astype(jnp.int32)
+    return jnp.stack([plan.apply_ladder(p[c], c)
+                      for c in range(len(moduli))], axis=0)

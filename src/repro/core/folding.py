@@ -121,19 +121,14 @@ def fold_np(x: np.ndarray, mod: Modulus, bound: int) -> np.ndarray:
 
 
 def fold_jnp(x, mod: Modulus, bound: int):
-    """JAX version (int32 lanes) — used by ref paths and kernel epilogues.
+    """JAX version (int32 lanes) — a single-channel view of the shared
+    Stage-④ ladder (`ChannelPlan.apply_ladder`, the one implementation).
 
     The schedule is static (baked at trace time); each rung is 4 vector ops.
     """
     import jax.numpy as jnp
 
-    sched = fold_schedule(bound, mod)
-    x = x.astype(jnp.int32)
-    for s, c in sched:
-        lo = jnp.bitwise_and(x, (1 << s) - 1)
-        hi = jnp.right_shift(x, s)
-        x = lo + hi * jnp.int32(c)
-    m = jnp.int32(mod.m)
-    for _ in range(max_subtracts(bound, sched, mod.m)):
-        x = jnp.where(x >= m, x - m, x)
-    return x
+    from .channel_plan import ChannelPlan
+
+    plan = ChannelPlan.for_channels((mod,), bound)
+    return plan.apply_ladder(x.astype(jnp.int32), 0)

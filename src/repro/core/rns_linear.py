@@ -9,9 +9,11 @@ entirely in the paper's residue arithmetic:
      the dynamic range — `rns.basis_for_accumulation`),
   3. per-channel integer matmul with *deferred* modular reduction — the
      multiplier paper's Stage ③ organization: no reduction inside the K loop,
-     one fold ladder at the end (Stage ④).  On TPU this maps to int8 MXU dots
-     with int32 accumulators (kernels/rns_matmul.py is the Pallas twin of the
-     jnp path used here; both share fold schedules),
+     one fold ladder at the end (Stage ④).  The Stage-④ plan and the
+     jnp/Pallas backend selection live in `core/channel_plan` (DESIGN.md
+     §5/§7); ``backend="pallas"`` executes `kernels/rns_matmul.py` (int8 MXU
+     dots, int32 VMEM accumulators), ``"jnp"`` the fused-XLA twin, ``"auto"``
+     picks by device,
   4. Mixed-Radix (MRC) reverse conversion in int32 limb arithmetic
      (TPU-native: no int64 anywhere), signed-range correction, dequantize.
 
@@ -28,6 +30,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from . import channel_plan as cp
 from . import multiword as mw
 from .quant import quantize_int8
 from .rns import RNSBasis, basis_for_accumulation
@@ -38,36 +41,6 @@ __all__ = ["rns_dense", "rns_int_matmul", "reconstruct_mrc"]
 @functools.lru_cache(maxsize=64)
 def _basis_for_k(k: int) -> RNSBasis:
     return basis_for_accumulation(k * 127 * 127, name=f"rns-dense-k{k}")
-
-
-def _channel_matmul(xq, wq, basis: RNSBasis):
-    """(M, K) int8 × (K, N) int8 → (C, M, N) int32 canonical residues.
-
-    jnp path of the kernel: int8 residues, int32 accumulation across the full
-    K dim (no per-MAC reduction), one fold ladder per channel at the end.
-    XLA maps the dot to the int8 MXU path on TPU.
-    """
-    from repro.kernels.ref import channel_schedules  # shared fold schedules
-
-    K = xq.shape[-1]
-    moduli = basis.moduli
-    bound = int(K) * max((m - 1) ** 2 for m in moduli)
-    sched, mods, n_sub = channel_schedules(tuple(moduli), bound)
-    outs = []
-    for c, m in enumerate(moduli):
-        a = jnp.mod(xq.astype(jnp.int32), m).astype(jnp.int8)
-        b = jnp.mod(wq.astype(jnp.int32), m).astype(jnp.int8)
-        acc = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
-                                  preferred_element_type=jnp.int32)
-        x = acc
-        for r in range(sched.shape[1]):
-            s = int(sched[c, r, 0])
-            cc = int(sched[c, r, 1])
-            x = jnp.bitwise_and(x, (1 << s) - 1) + jnp.right_shift(x, s) * cc
-        for _ in range(n_sub):
-            x = jnp.where(x >= m, x - m, x)
-        outs.append(x)
-    return jnp.stack(outs, axis=0)
 
 
 def reconstruct_mrc(residues, basis: RNSBasis):
@@ -102,86 +75,49 @@ def reconstruct_mrc(residues, basis: RNSBasis):
     return jnp.where(is_neg, -neg, pos)
 
 
-def _channel_matmul_broadcast(xq, wq, basis: RNSBasis):
-    """Beyond-paper optimization (EXPERIMENTS.md §Perf cell C): the
-    broadcast-operand modular matmul.
-
-    Observation: Σ_k x_k·w_k ≡ Σ_k x_k·|w_k|_m (mod m) — the *activation*
-    operand never needs forward conversion; only the (often static) weights
-    do.  All C channels are then fused into ONE int8 MXU matmul
-    (M,K)×(K,C·N) — activations are read once instead of C times, the
-    per-channel small matmuls become a single MXU-shaped contraction, and
-    the C× conversion of activations disappears.  The accumulator can be
-    negative (raw signed x), so the Stage-④ ladder runs on |acc| with a
-    final sign fix-up: (−v) mod m = m − (v mod m).
-
-    Bound: |acc| ≤ K·127·(m−1) — int32-safe for K < 3.6e5 and 1 extra rung.
-    """
-    from repro.kernels.ref import channel_schedules
-
-    K, N = wq.shape
-    moduli = basis.moduli
-    C = len(moduli)
-    bound = int(K) * 127 * max(m - 1 for m in moduli)
-    assert bound < 2**31, f"int32 overflow: K={K}"
-    sched, mods, n_sub = channel_schedules(tuple(moduli), bound)
-    w_res = jnp.concatenate(
-        [jnp.mod(wq.astype(jnp.int32), m).astype(jnp.int8) for m in moduli],
-        axis=-1)                                          # (K, C·N)
-    acc = jax.lax.dot_general(xq, w_res, (((1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.int32)  # (M, C·N)
-    outs = []
-    for c, m in enumerate(moduli):
-        x = acc[:, c * N:(c + 1) * N]
-        neg = x < 0
-        x = jnp.abs(x)
-        for r in range(sched.shape[1]):
-            s = int(sched[c, r, 0])
-            cc = int(sched[c, r, 1])
-            x = jnp.bitwise_and(x, (1 << s) - 1) + jnp.right_shift(x, s) * cc
-        for _ in range(n_sub):
-            x = jnp.where(x >= m, x - m, x)
-        x = jnp.where(neg & (x > 0), m - x, x)            # sign fix-up
-        outs.append(x)
-    return jnp.stack(outs, axis=0)
-
-
 def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
-                   broadcast: bool = True):
+                   broadcast: bool = True, *, backend: str = "auto",
+                   interpret: bool | None = None):
     """Exact int8 matmul through residue channels: (M,K)×(K,N) → f32 (M,N).
 
     The result equals the int64 product exactly for any K admitted by the
     basis (property-tested); returned as float32 (exact below 2^24, the
     usual accelerator dequant precision).  ``broadcast`` selects the fused
-    single-matmul datapath (default; see _channel_matmul_broadcast) vs the
-    paper-literal per-channel conversion (the §Perf baseline).
+    broadcast-operand datapath (default; see `channel_plan.matmul_broadcast`:
+    activations stay raw signed int8, only weights are forward-converted) vs
+    the paper-literal per-channel conversion (the §Perf baseline).
+    ``backend``/``interpret`` select the execution engine (DESIGN.md §7):
+    "jnp" (fused XLA), "pallas" (the kernels), or "auto" (by device).
     """
     basis = basis or _basis_for_k(xq.shape[-1])
+    moduli = tuple(int(m) for m in basis.moduli)
     if broadcast:
-        res = _channel_matmul_broadcast(xq, wq, basis)
+        res = cp.matmul_broadcast(xq, wq, moduli, backend=backend,
+                                  interpret=interpret)
     else:
-        res = _channel_matmul(xq, wq, basis)
+        plan = cp.ChannelPlan.for_matmul(moduli, xq.shape[-1])
+        res = cp.matmul(plan.forward(xq), plan.forward(wq), moduli,
+                        backend=backend, interpret=interpret, plan=plan)
     return reconstruct_mrc(res, basis)
 
 
-@jax.custom_vjp
-def rns_dense(x, w):
-    """y = x @ w with the integer core in RNS; straight-through backward."""
-    return _rns_dense_fwd_impl(x, w)
-
-
-def _rns_dense_fwd_impl(x, w):
+def _rns_dense_fwd_impl(x, w, backend):
     xq, sx = quantize_int8(x, axis=-1)        # per-row
     wq, sw = quantize_int8(w, axis=0)         # per-column
-    y = rns_int_matmul(xq, wq)
+    y = rns_int_matmul(xq, wq, backend=backend)
     return (y * sx * sw).astype(x.dtype)
 
 
-def _fwd(x, w):
-    return _rns_dense_fwd_impl(x, w), (x, w)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rns_dense(x, w, backend):
+    return _rns_dense_fwd_impl(x, w, backend)
 
 
-def _bwd(res, gy):
+def _fwd(x, w, backend):
+    return _rns_dense_fwd_impl(x, w, backend), (x, w)
+
+
+def _bwd(backend, res, gy):
     x, w = res
     gy32 = gy.astype(jnp.float32)
     gx = (gy32 @ w.astype(jnp.float32).T).astype(x.dtype)
@@ -189,4 +125,14 @@ def _bwd(res, gy):
     return gx, gw
 
 
-rns_dense.defvjp(_fwd, _bwd)
+_rns_dense.defvjp(_fwd, _bwd)
+
+
+def rns_dense(x, w, backend: str = "auto"):
+    """y = x @ w with the integer core in RNS; straight-through backward.
+
+    ``backend`` plumbs through to the Stage-④ dispatch layer: "auto" (Pallas
+    on TPU, fused XLA elsewhere), "jnp", or "pallas" — both produce
+    bit-identical residues (parity-tested across the paper channel sets).
+    """
+    return _rns_dense(x, w, backend)

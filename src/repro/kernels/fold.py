@@ -1,9 +1,10 @@
 """Pallas kernel: standalone overflow-fold ("squeezing") over residue lanes.
 
 Stage ④ of the paper as a reusable primitive: takes (C, S) int32 values below
-a static bound and returns canonical residues.  Used to re-reduce accumulator
-chains that exceed one matmul tile (e.g. chained MAC epilogues) and as the
-smallest possible correctness harness for the fold ladder itself.
+a static bound and returns canonical residues — `ChannelPlan.apply_ladder`
+wrapped in a grid.  Used to re-reduce accumulator chains that exceed one
+matmul tile (e.g. chained MAC epilogues) and as the smallest possible
+correctness harness for the fold ladder itself.
 """
 from __future__ import annotations
 
@@ -13,45 +14,36 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import channel_schedules
+from repro.core.channel_plan import ChannelPlan, resolve_interpret
 
 __all__ = ["fold"]
 
 
-def _kernel(sched_ref, mod_ref, x_ref, o_ref, *, n_sub: int):
-    x = x_ref[0]
-    sched = sched_ref[0]
-    m = mod_ref[0]
-    for r in range(sched.shape[0]):
-        s = sched[r, 0]
-        c = sched[r, 1]
-        mask = jnp.left_shift(jnp.int32(1), s) - 1
-        x = jnp.bitwise_and(x, mask) + jnp.right_shift(x, s) * c
-    for _ in range(n_sub):
-        x = jnp.where(x >= m, x - m, x)
-    o_ref[...] = x[None]
+def _kernel(sched_ref, mod_ref, x_ref, o_ref, *, plan: ChannelPlan):
+    o_ref[...] = plan.apply_ladder(x_ref[0], sched=sched_ref[0],
+                                   m=mod_ref[0])[None]
 
 
 @functools.partial(jax.jit, static_argnames=("moduli", "bound", "block",
                                              "interpret"))
 def fold(x, moduli: tuple, bound: int, *, block: int = 1024,
-         interpret: bool = True):
+         interpret: bool | None = None):
     """Canonicalize (C, S) int32 values < bound into [0, m_c) per channel."""
     C, S = x.shape
-    sched_np, mods_np, n_sub = channel_schedules(tuple(int(m) for m in moduli),
-                                                 int(bound))
-    sched = jnp.asarray(sched_np)
-    mods = jnp.asarray(mods_np)
+    interpret = resolve_interpret(interpret)
+    plan = ChannelPlan.build(moduli, int(bound))
+    sched = jnp.asarray(plan.sched)
+    mods = jnp.asarray(plan.mods)
     b = min(block, S)
     pad = (-S) % b
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad)))
     Sp = S + pad
     out = pl.pallas_call(
-        functools.partial(_kernel, n_sub=n_sub),
+        functools.partial(_kernel, plan=plan),
         grid=(C, Sp // b),
         in_specs=[
-            pl.BlockSpec((1, sched.shape[1], 2), lambda c, i: (c, 0, 0)),
+            pl.BlockSpec((1, plan.num_rungs, 2), lambda c, i: (c, 0, 0)),
             pl.BlockSpec((1,), lambda c, i: (c,)),
             pl.BlockSpec((1, b), lambda c, i: (c, i)),
         ],

@@ -3,11 +3,14 @@
 Backend dispatch: on TPU the kernels compile natively (interpret=False);
 everywhere else (this CPU container, unit tests) they run in interpret mode,
 which executes the kernel body in Python for bit-exact validation against
-`ref.py`.  Callers can force either mode.
+`ref.py`.  The device-aware selection lives in
+`core/channel_plan.resolve_interpret`; the RNS kernels resolve
+``interpret=None`` themselves, so these wrappers only coerce static
+arguments.  Callers can force either mode.
 """
 from __future__ import annotations
 
-import jax
+from repro.core.channel_plan import resolve_interpret
 
 from . import ref
 from .flash_attention import flash_attention as _flash_attention
@@ -18,26 +21,22 @@ from .rns_modmul import rns_modmul as _rns_modmul
 __all__ = ["rns_matmul", "rns_modmul", "fold", "flash_attention", "ref"]
 
 
-def _interp(interpret):
-    if interpret is not None:
-        return interpret
-    return jax.default_backend() != "tpu"
-
-
 def rns_matmul(a_res, b_res, moduli, *, interpret=None, **kw):
     return _rns_matmul(a_res, b_res, tuple(int(m) for m in moduli),
-                       interpret=_interp(interpret), **kw)
+                       interpret=interpret, **kw)
 
 
 def rns_modmul(a_res, b_res, moduli, *, interpret=None, **kw):
     return _rns_modmul(a_res, b_res, tuple(int(m) for m in moduli),
-                       interpret=_interp(interpret), **kw)
+                       interpret=interpret, **kw)
 
 
 def fold(x, moduli, bound, *, interpret=None, **kw):
     return _fold(x, tuple(int(m) for m in moduli), int(bound),
-                 interpret=_interp(interpret), **kw)
+                 interpret=interpret, **kw)
 
 
 def flash_attention(q, k, v, *, interpret=None, **kw):
-    return _flash_attention(q, k, v, interpret=_interp(interpret), **kw)
+    # flash_attention's kernel entry point does not resolve None itself.
+    return _flash_attention(q, k, v, interpret=resolve_interpret(interpret),
+                            **kw)

@@ -2,21 +2,19 @@
 
 Each `*_ref` function is numerically *exact* (integer kernels) or
 allclose-equivalent (attention) to its kernel twin; the test suite sweeps
-shapes/dtypes and asserts agreement.  The integer oracles share the fold
-schedules of `repro.core.folding`, so kernel and oracle provably apply the
-same congruence ladder.
+shapes/dtypes and asserts agreement.  The integer oracles consume the same
+`repro.core.channel_plan.ChannelPlan` (schedules AND ladder code) as the
+kernels, so kernel and oracle provably apply the same congruence ladder.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.folding import fold_schedule, max_subtracts, schedule_output_bound
-from repro.core.twit import Modulus, is_power_of_two
+from repro.core.channel_plan import ChannelPlan
 
 __all__ = [
     "channel_schedules",
@@ -27,53 +25,19 @@ __all__ = [
 ]
 
 
-@functools.lru_cache(maxsize=1024)
 def channel_schedules(moduli: Tuple[int, ...], bound: int,
                       max_rungs: int = 6) -> Tuple[np.ndarray, np.ndarray, int]:
     """Per-channel fold ladders, padded to a common rung count.
 
-    Returns (sched, mods, n_sub):
-      sched: (C, R, 2) int32 — (shift, constant) rungs; pad rungs are
-             (30, 0-extended constant) no-ops (values are < 2^30 after any
-             real rung, so hi = v >> 30 = 0).
+    Compatibility view over :class:`~repro.core.channel_plan.ChannelPlan`
+    (the single owner of all Stage-④ precomputation).  Returns
+    (sched, mods, n_sub):
+      sched: (C, R, 2) int32 — (shift, constant) rungs, no-op padded.
       mods:  (C,) int32 moduli.
       n_sub: conditional-subtract count covering every channel.
     """
-    scheds = []
-    n_sub = 1
-    for m in moduli:
-        if is_power_of_two(m):
-            s = (int(np.log2(m)), 0)          # lo + hi·0 == v mod m, exact
-            scheds.append([s])
-            continue
-        mod = Modulus.from_value(m)
-        sc = list(fold_schedule(bound, mod, target_multiple=4,
-                                max_rungs=max_rungs))
-        n_sub = max(n_sub, max_subtracts(bound, sc, m))
-        scheds.append(sc)
-    R = max(len(s) for s in scheds)
-    pad = (30, 0)
-    # pad rung (30, 0): v -> (v & (2^30-1)) + (v>>30)*0; post-ladder values
-    # are < 4m < 2^30, so the mask keeps them intact and the hi term is 0.
-    arr = np.zeros((len(moduli), R, 2), dtype=np.int32)
-    for c, s in enumerate(scheds):
-        rows = list(s) + [pad] * (R - len(s))
-        arr[c] = np.asarray(rows, dtype=np.int32)
-    mods = np.asarray(moduli, dtype=np.int32)
-    return arr, mods, n_sub
-
-
-def _apply_ladder(x, sched_c, m, n_sub):
-    """Apply one channel's ladder + subtracts to an int32 array."""
-    R = sched_c.shape[0]
-    for r in range(R):
-        s = sched_c[r, 0]
-        c = sched_c[r, 1]
-        mask = jnp.left_shift(jnp.int32(1), s) - 1
-        x = jnp.bitwise_and(x, mask) + jnp.right_shift(x, s) * c
-    for _ in range(n_sub):
-        x = jnp.where(x >= m, x - m, x)
-    return x
+    plan = ChannelPlan.build(moduli, bound, max_rungs=max_rungs)
+    return plan.sched, plan.mods, plan.n_sub
 
 
 def rns_matmul_ref(a_res, b_res, moduli: Sequence[int]):
@@ -85,41 +49,29 @@ def rns_matmul_ref(a_res, b_res, moduli: Sequence[int]):
 
     The contraction accumulates *unreduced* in int32 (the carry-save analogue)
     and folds once at the end — the paper's deferred-reduction organization.
+    The fold is `ChannelPlan.apply_ladder`, the same code the kernels run.
     """
-    moduli = tuple(int(m) for m in moduli)
-    K = a_res.shape[-1]
-    bound = int(K) * max((m - 1) ** 2 for m in moduli)
-    assert bound < 2**31, f"int32 accumulator overflow: K={K}"
-    sched, mods, n_sub = channel_schedules(moduli, bound)
+    plan = ChannelPlan.for_matmul(tuple(int(m) for m in moduli),
+                                  a_res.shape[-1])
     acc = jnp.einsum("cmk,ckn->cmn", a_res.astype(jnp.int32),
                      b_res.astype(jnp.int32))
-    outs = []
-    for c in range(len(moduli)):
-        outs.append(_apply_ladder(acc[c], sched[c], jnp.int32(moduli[c]), n_sub))
-    return jnp.stack(outs, axis=0)
+    return jnp.stack([plan.apply_ladder(acc[c], c)
+                      for c in range(plan.k)], axis=0)
 
 
 def rns_modmul_ref(a_res, b_res, moduli: Sequence[int]):
     """Oracle for the elementwise residue multiply: (C, ...) → (C, ...)."""
-    moduli = tuple(int(m) for m in moduli)
-    bound = max((m - 1) ** 2 for m in moduli)
-    sched, mods, n_sub = channel_schedules(moduli, bound)
+    plan = ChannelPlan.for_product(tuple(int(m) for m in moduli))
     p = a_res.astype(jnp.int32) * b_res.astype(jnp.int32)
-    outs = []
-    for c in range(len(moduli)):
-        outs.append(_apply_ladder(p[c], sched[c], jnp.int32(moduli[c]), n_sub))
-    return jnp.stack(outs, axis=0)
+    return jnp.stack([plan.apply_ladder(p[c], c)
+                      for c in range(plan.k)], axis=0)
 
 
 def fold_ref(x, moduli: Sequence[int], bound: int):
     """Oracle for the standalone fold kernel: (C, ...) int32 → canonical."""
-    moduli = tuple(int(m) for m in moduli)
-    sched, mods, n_sub = channel_schedules(moduli, int(bound))
-    outs = []
-    for c in range(len(moduli)):
-        outs.append(_apply_ladder(x[c].astype(jnp.int32), sched[c],
-                                  jnp.int32(moduli[c]), n_sub))
-    return jnp.stack(outs, axis=0)
+    plan = ChannelPlan.build(tuple(int(m) for m in moduli), int(bound))
+    return jnp.stack([plan.apply_ladder(x[c].astype(jnp.int32), c)
+                      for c in range(plan.k)], axis=0)
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,

@@ -12,18 +12,22 @@ matmul-tile granularity (DESIGN.md §2):
                                         reduction (the carry-save analogue);
   Stage ④ (squeezing + final add)     → the fold-ladder epilogue, executed
                                         once per output tile on the last K
-                                        step: a static chain of
-                                        shift/mask/multiply-add rungs (the
-                                        congruence 2^s ≡ |2^s|_m) followed by
-                                        a bounded number of conditional
-                                        subtracts.  One "carry-propagate
+                                        step — `ChannelPlan.apply_ladder`
+                                        over schedule rows streamed as a tiny
+                                        int32 input.  One "carry-propagate
                                         moment" per tile — the paper's
                                         single-CPA principle.
 
+The epilogue and all schedule precomputation live in
+`core/channel_plan.ChannelPlan` (DESIGN.md §5) — this file owns only the
+tiling and the MXU contraction.
+
 Layout: operands are (C, M, K) / (C, K, N) int8 residues; the channel axis C
 is the outermost grid dimension so each modulus channel runs independently
-(the paper's modular-channel parallelism).  Fold ladders are per-channel
-(shift, constant) tables streamed as a tiny int32 input.
+(the paper's modular-channel parallelism).  In broadcast-operand mode
+(``signed_a``) the activation operand is passed once as (1, M, K) raw signed
+int8 and every channel's grid step streams the *same* block — no C× operand
+duplication in HBM.
 
 Grid: (C, M/bm, N/bn, K/bk); K is the innermost, sequential ("arbitrary")
 dimension; M/N/C are parallel.  VMEM per step ≈ bm·bk + bk·bn (int8)
@@ -39,13 +43,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .ref import channel_schedules
+from repro.core.channel_plan import ChannelPlan, resolve_interpret
 
 __all__ = ["rns_matmul"]
 
 
 def _kernel(sched_ref, mod_ref, a_ref, b_ref, o_ref, acc_ref, *,
-            nk: int, n_sub: int, signed_a: bool):
+            plan: ChannelPlan, nk: int):
     k_step = pl.program_id(3)
 
     @pl.when(k_step == 0)
@@ -61,34 +65,25 @@ def _kernel(sched_ref, mod_ref, a_ref, b_ref, o_ref, acc_ref, *,
 
     @pl.when(k_step == nk - 1)
     def _epilogue():
-        x = acc_ref[...]
-        sched = sched_ref[0]           # (R, 2) int32 rungs for this channel
-        m = mod_ref[0]
-        if signed_a:
-            # broadcast-operand mode: a is *raw signed* int8 (no forward
-            # conversion) — fold |acc| and fix the sign: (−v) mod m = m − r
-            neg = x < 0
-            x = jnp.abs(x)
-        for r in range(sched.shape[0]):   # static unroll — Stage ④ ladder
-            s = sched[r, 0]
-            c = sched[r, 1]
-            mask = jnp.left_shift(jnp.int32(1), s) - 1
-            x = jnp.bitwise_and(x, mask) + jnp.right_shift(x, s) * c
-        for _ in range(n_sub):             # bounded canonicalization
-            x = jnp.where(x >= m, x - m, x)
-        if signed_a:
-            x = jnp.where(neg & (x > 0), m - x, x)
-        o_ref[...] = x[None]
+        # Stage ④: the shared fold ladder over this channel's traced rows.
+        # plan.signed ⇒ broadcast-operand mode (raw signed activations): the
+        # ladder runs on |acc| with the (−v) mod m = m − r sign fix-up.
+        o_ref[...] = plan.fold(acc_ref[...], sched=sched_ref[0],
+                               m=mod_ref[0])[None]
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "moduli", "block_m", "block_n", "block_k", "interpret", "signed_a"))
+    "moduli", "block_m", "block_n", "block_k", "interpret", "signed_a",
+    "plan"))
 def rns_matmul(a_res, b_res, moduli: tuple, *,
                block_m: int = 128, block_n: int = 128, block_k: int = 512,
-               interpret: bool = True, signed_a: bool = False):
+               interpret: bool | None = None, signed_a: bool = False,
+               plan: ChannelPlan | None = None):
     """|A·B|_{m_c} for every channel c.
 
-    a_res: (C, M, K) int8 residues; b_res: (C, K, N) int8 residues.
+    a_res: (C, M, K) int8 residues — or (1, M, K) raw signed int8 in
+    ``signed_a`` mode (the block is broadcast across channels by the index
+    map); b_res: (C, K, N) int8 residues.
     Returns (C, M, N) int32 canonical residues.
 
     signed_a: broadcast-operand mode (EXPERIMENTS.md §Perf C0) — `a_res`
@@ -96,22 +91,31 @@ def rns_matmul(a_res, b_res, moduli: tuple, *,
     forward conversion; Σx·w ≡ Σx·|w|_m); the epilogue folds |acc| and
     fixes the sign.
 
+    interpret=None selects by device: native compile on TPU, kernel-body
+    interpreter elsewhere (bit-exact validation path).
+
+    plan: optional explicit ChannelPlan (e.g. a wider bound for
+    non-canonical inputs); its signedness must match ``signed_a``.  Default:
+    the cached `for_matmul(moduli, K, signed=signed_a)` plan.
+
     M/N/K are padded to block multiples (zero residues contribute zero to the
     modular sum, so padding is exact); the result is sliced back.
     """
-    C, M, K = a_res.shape
+    Ca, M, K = a_res.shape
     C2, K2, N = b_res.shape
-    assert K == K2 and C2 == C, (a_res.shape, b_res.shape)
-    if signed_a:
-        bound = int(K) * 127 * max(int(m) - 1 for m in moduli)
-    else:
-        bound = int(K) * max((int(m) - 1) ** 2 for m in moduli)
-    if bound >= 2**31:
-        raise ValueError(f"int32 accumulator overflow: K={K}, moduli={moduli}")
-    sched_np, mods_np, n_sub = channel_schedules(tuple(int(m) for m in moduli),
-                                                 bound)
-    sched = jnp.asarray(sched_np)
-    mods = jnp.asarray(mods_np)
+    C = C2
+    assert K == K2 and Ca in (1, C), (a_res.shape, b_res.shape)
+    assert Ca == C or signed_a, "broadcast a_res requires signed_a=True"
+    interpret = resolve_interpret(interpret)
+    # Overflow validation + fold schedules, precomputed once per (moduli, K).
+    if plan is None:
+        plan = ChannelPlan.for_matmul(moduli, K, signed=signed_a)
+    elif plan.moduli != tuple(int(m) for m in moduli) \
+            or plan.signed != signed_a:
+        raise ValueError(f"plan {plan} does not match moduli={moduli}, "
+                         f"signed_a={signed_a}")
+    sched = jnp.asarray(plan.sched)
+    mods = jnp.asarray(plan.mods)
 
     bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))
     pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
@@ -122,14 +126,16 @@ def rns_matmul(a_res, b_res, moduli: tuple, *,
     Mp, Np, Kp = M + pm, N + pn, K + pk
     nk = Kp // bk
     grid = (C, Mp // bm, Np // bn, nk)
+    a_index = ((lambda c, i, j, k: (0, i, k)) if Ca == 1
+               else (lambda c, i, j, k: (c, i, k)))
 
     out = pl.pallas_call(
-        functools.partial(_kernel, nk=nk, n_sub=n_sub, signed_a=signed_a),
+        functools.partial(_kernel, plan=plan, nk=nk),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, sched.shape[1], 2), lambda c, i, j, k: (c, 0, 0)),
+            pl.BlockSpec((1, plan.num_rungs, 2), lambda c, i, j, k: (c, 0, 0)),
             pl.BlockSpec((1,), lambda c, i, j, k: (c,)),
-            pl.BlockSpec((1, bm, bk), lambda c, i, j, k: (c, i, k)),
+            pl.BlockSpec((1, bm, bk), a_index),
             pl.BlockSpec((1, bk, bn), lambda c, i, j, k: (c, k, j)),
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda c, i, j, k: (c, i, j)),

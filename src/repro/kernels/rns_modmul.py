@@ -3,8 +3,9 @@
 The per-element twit-multiplier analogue (DESIGN.md §2): one int32 product
 (the Stage ② local products, collapsed — operands are < 2^6..2^12 so the full
 product is a single integer multiply on TPU) followed by the Stage ④ fold
-ladder.  Used for Hadamard-style modular ops (pointwise scaling, CRT weight
-application) in the RNS datapath.
+ladder (`ChannelPlan.apply_ladder` over streamed schedule rows).  Used for
+Hadamard-style modular ops (pointwise scaling, CRT weight application) in the
+RNS datapath.
 """
 from __future__ import annotations
 
@@ -14,36 +15,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import channel_schedules
+from repro.core.channel_plan import ChannelPlan, resolve_interpret
 
 __all__ = ["rns_modmul"]
 
 
-def _kernel(sched_ref, mod_ref, a_ref, b_ref, o_ref, *, n_sub: int):
+def _kernel(sched_ref, mod_ref, a_ref, b_ref, o_ref, *, plan: ChannelPlan):
     x = a_ref[0].astype(jnp.int32) * b_ref[0].astype(jnp.int32)
-    sched = sched_ref[0]
-    m = mod_ref[0]
-    for r in range(sched.shape[0]):
-        s = sched[r, 0]
-        c = sched[r, 1]
-        mask = jnp.left_shift(jnp.int32(1), s) - 1
-        x = jnp.bitwise_and(x, mask) + jnp.right_shift(x, s) * c
-    for _ in range(n_sub):
-        x = jnp.where(x >= m, x - m, x)
-    o_ref[...] = x[None]
+    o_ref[...] = plan.apply_ladder(x, sched=sched_ref[0], m=mod_ref[0])[None]
 
 
 @functools.partial(jax.jit, static_argnames=("moduli", "block", "interpret"))
 def rns_modmul(a_res, b_res, moduli: tuple, *, block: int = 1024,
-               interpret: bool = True):
+               interpret: bool | None = None):
     """|a·b|_{m_c} elementwise.  a_res/b_res: (C, S) integer residues."""
     C, S = a_res.shape
     assert b_res.shape == (C, S)
-    bound = max((int(m) - 1) ** 2 for m in moduli)
-    sched_np, mods_np, n_sub = channel_schedules(tuple(int(m) for m in moduli),
-                                                 bound)
-    sched = jnp.asarray(sched_np)
-    mods = jnp.asarray(mods_np)
+    interpret = resolve_interpret(interpret)
+    plan = ChannelPlan.for_product(moduli)
+    sched = jnp.asarray(plan.sched)
+    mods = jnp.asarray(plan.mods)
     b = min(block, S)
     pad = (-S) % b
     if pad:
@@ -51,10 +42,10 @@ def rns_modmul(a_res, b_res, moduli: tuple, *, block: int = 1024,
         b_res = jnp.pad(b_res, ((0, 0), (0, pad)))
     Sp = S + pad
     out = pl.pallas_call(
-        functools.partial(_kernel, n_sub=n_sub),
+        functools.partial(_kernel, plan=plan),
         grid=(C, Sp // b),
         in_specs=[
-            pl.BlockSpec((1, sched.shape[1], 2), lambda c, i: (c, 0, 0)),
+            pl.BlockSpec((1, plan.num_rungs, 2), lambda c, i: (c, 0, 0)),
             pl.BlockSpec((1,), lambda c, i: (c,)),
             pl.BlockSpec((1, b), lambda c, i: (c, i)),
             pl.BlockSpec((1, b), lambda c, i: (c, i)),

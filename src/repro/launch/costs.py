@@ -133,7 +133,7 @@ def analytic_cost(cfg: ModelConfig, shape: ShapeConfig, *,
     # backward is dense bf16 (custom_vjp), i.e. 2 of the 4 fwd-equivalents
     # with full remat, 1 of 3 without.
     flops_int8 = 0.0
-    if cfg.linear_backend == "rns_int8":
+    if cfg.linear_backend.partition(":")[0] == "rns_int8":
         from repro.core.rns_linear import _basis_for_k
         C = _basis_for_k(d).k              # channel count (K≈d dominates)
         dense = flops_dev - (attn_ctx / eff)

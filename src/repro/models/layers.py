@@ -11,7 +11,10 @@ Linear layers dispatch on cfg.linear_backend:
   * "bf16"     — plain dot in the param dtype.
   * "rns_int8" — the paper's RNS integer matmul (`core/rns_linear.rns_dense`):
                  exact int8 product through 2^5±δ residue channels with
-                 deferred folding, straight-through gradients.
+                 deferred folding, straight-through gradients.  An optional
+                 ":auto" / ":jnp" / ":pallas" suffix selects the Stage-④
+                 execution engine (core/channel_plan backend dispatch), e.g.
+                 "rns_int8:pallas" runs the Pallas kernels.
 """
 from __future__ import annotations
 
@@ -42,11 +45,19 @@ def make_dense_params(key, d_in: int, d_out: int, dtype, scale: float | None = N
 
 
 def linear(x, w, backend: str = "bf16"):
-    """x: (..., d_in) @ w: (d_in, d_out) under the selected backend."""
-    if backend == "rns_int8":
+    """x: (..., d_in) @ w: (d_in, d_out) under the selected backend.
+
+    ``backend`` is "bf16" or "rns_int8" with an optional kernel-backend
+    suffix ("rns_int8:pallas" / "rns_int8:jnp" / "rns_int8:auto").
+    """
+    name, _, kernel_backend = backend.partition(":")
+    if name == "rns_int8":
         shp = x.shape
-        y = rns_dense(x.reshape(-1, shp[-1]), w)
+        y = rns_dense(x.reshape(-1, shp[-1]), w, kernel_backend or "auto")
         return y.reshape(*shp[:-1], w.shape[-1])
+    if name != "bf16" or kernel_backend:
+        raise ValueError(f"unknown linear backend {backend!r} "
+                         "(expected bf16 | rns_int8[:auto|jnp|pallas])")
     return jnp.einsum("...d,df->...f", x, w)
 
 

@@ -1,7 +1,7 @@
 """Baseline designs [14], [15] (paper §III-B, Fig. 1) as functional models."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips
 
 from repro.core.baselines import (hiasat_effective_width, matutino_applicable,
                                   mulmod_binary, mulmod_hiasat,

@@ -1,0 +1,271 @@
+"""ChannelPlan + backend dispatch: the unified Stage-④ fold datapath.
+
+Covers the acceptance criteria of the ChannelPlan refactor:
+  * jnp and pallas backends produce identical residues for the per-channel,
+    broadcast-operand, and elementwise ops across the paper n=5 basis and
+    the Table III n=8 / n=11 channel sets;
+  * `rns_dense(backend="pallas")` demonstrably executes the Pallas kernel
+    and agrees bit-for-bit with the jnp path;
+  * `rns_dense` / `rns_int_matmul` outputs are bit-identical to the
+    pre-refactor (seed) implementation (golden vectors baked below);
+  * plan construction validates int32 overflow and is cached.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import channel_plan as cp
+from repro.core.channel_plan import ChannelPlan
+from repro.core.folding import fold_np
+from repro.core.rns import (N8_CHANNELS, N11_CHANNELS, basis_for_accumulation)
+from repro.core.rns_linear import rns_dense, rns_int_matmul
+
+PAPER = tuple(basis_for_accumulation(256 * 127 * 127).moduli)
+CHANNEL_SETS = {
+    "paper-n5": PAPER,
+    "n8": N8_CHANNELS,
+    "n11": N11_CHANNELS,
+}
+
+
+def _residues(rng, moduli, shape):
+    return np.stack([rng.integers(0, m, shape) for m in moduli]
+                    ).astype(np.int32)
+
+
+# ----------------------------------------------------------------- plan ----
+def test_plan_is_cached():
+    p1 = ChannelPlan.for_matmul(PAPER, 128)
+    p2 = ChannelPlan.for_matmul(PAPER, 128)
+    assert p1 is p2                      # lru-cached construction
+
+
+def test_plan_overflow_validation():
+    with pytest.raises(ValueError):
+        ChannelPlan.for_matmul(PAPER, 2**21)
+    with pytest.raises(ValueError):
+        ChannelPlan.build(PAPER, 2**40)
+
+
+def test_plan_signed_metadata_and_dtype():
+    signed = ChannelPlan.for_matmul(PAPER, 64, signed=True)
+    assert signed.signed and signed.bound == 64 * 127 * (max(PAPER) - 1)
+    assert signed.residue_dtype == jnp.int8            # residues < 128
+    wide = ChannelPlan.for_product(N11_CHANNELS)
+    assert wide.residue_dtype == jnp.int32             # residues up to 3070
+
+
+@pytest.mark.parametrize("name", sorted(CHANNEL_SETS))
+def test_apply_ladder_matches_numpy_oracle(name):
+    moduli = CHANNEL_SETS[name]
+    bound = 10_000_000
+    plan = ChannelPlan.build(moduli, bound)
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, bound, 512).astype(np.int64)
+    for c, m in enumerate(moduli):
+        got = np.asarray(plan.apply_ladder(jnp.asarray(x, jnp.int32), c))
+        assert np.array_equal(got, x % m), (name, m)
+        if plan.channels[c] is not None:
+            assert np.array_equal(fold_np(x, plan.channels[c], bound), x % m)
+
+
+# ------------------------------------------------------ backend parity -----
+@pytest.mark.parametrize("name", sorted(CHANNEL_SETS))
+def test_matmul_backend_parity(name):
+    """Per-channel residue matmul: jnp == pallas == int64 oracle."""
+    moduli = CHANNEL_SETS[name]
+    rng = np.random.default_rng(len(moduli))
+    M, K, N = 16, 48, 24
+    xq = rng.integers(-127, 128, (M, K)).astype(np.int64)
+    wq = rng.integers(-127, 128, (K, N)).astype(np.int64)
+    a = jnp.asarray(np.stack([np.mod(xq, m) for m in moduli]), jnp.int32)
+    b = jnp.asarray(np.stack([np.mod(wq, m) for m in moduli]), jnp.int32)
+    y_jnp = np.asarray(cp.matmul(a, b, moduli, backend="jnp"))
+    y_pal = np.asarray(cp.matmul(a, b, moduli, backend="pallas",
+                                 block_m=8, block_n=8, block_k=16))
+    want = np.stack([np.mod(xq @ wq, m) for m in moduli])
+    assert np.array_equal(y_jnp, y_pal)
+    assert np.array_equal(y_jnp, want)
+
+
+@pytest.mark.parametrize("name", sorted(CHANNEL_SETS))
+def test_matmul_broadcast_backend_parity(name):
+    """Broadcast-operand (signed_a) path: jnp == pallas == int64 oracle —
+    the first time this mode reaches the Pallas kernel from the layer API."""
+    moduli = CHANNEL_SETS[name]
+    rng = np.random.default_rng(7 * len(moduli))
+    M, K, N = 8, 64, 16
+    xq = rng.integers(-127, 128, (M, K)).astype(np.int8)
+    wq = rng.integers(-127, 128, (K, N)).astype(np.int8)
+    y_jnp = np.asarray(cp.matmul_broadcast(jnp.asarray(xq), jnp.asarray(wq),
+                                           moduli, backend="jnp"))
+    y_pal = np.asarray(cp.matmul_broadcast(jnp.asarray(xq), jnp.asarray(wq),
+                                           moduli, backend="pallas",
+                                           block_m=8, block_n=8, block_k=32))
+    want = np.stack([np.mod(xq.astype(np.int64) @ wq.astype(np.int64), m)
+                     for m in moduli])
+    assert np.array_equal(y_jnp, y_pal)
+    assert np.array_equal(y_jnp, want)
+
+
+@pytest.mark.parametrize("name", sorted(CHANNEL_SETS))
+def test_modmul_backend_parity(name):
+    moduli = CHANNEL_SETS[name]
+    rng = np.random.default_rng(11)
+    a = _residues(rng, moduli, 300)
+    b = _residues(rng, moduli, 300)
+    y_jnp = np.asarray(cp.modmul(jnp.asarray(a), jnp.asarray(b), moduli,
+                                 backend="jnp"))
+    y_pal = np.asarray(cp.modmul(jnp.asarray(a), jnp.asarray(b), moduli,
+                                 backend="pallas", block=128))
+    want = np.stack([(a[c].astype(np.int64) * b[c]) % moduli[c]
+                     for c in range(len(moduli))])
+    assert np.array_equal(y_jnp, y_pal)
+    assert np.array_equal(y_jnp, want)
+
+
+@pytest.mark.parametrize("broadcast", [True, False])
+def test_rns_int_matmul_backend_parity(broadcast):
+    rng = np.random.default_rng(99)
+    xq = rng.integers(-127, 128, (8, 160)).astype(np.int8)
+    wq = rng.integers(-127, 128, (160, 12)).astype(np.int8)
+    y_jnp = np.asarray(rns_int_matmul(jnp.asarray(xq), jnp.asarray(wq),
+                                      broadcast=broadcast, backend="jnp"))
+    y_pal = np.asarray(rns_int_matmul(jnp.asarray(xq), jnp.asarray(wq),
+                                      broadcast=broadcast, backend="pallas"))
+    want = xq.astype(np.int64) @ wq.astype(np.int64)
+    assert np.array_equal(y_jnp, y_pal)
+    assert np.array_equal(y_jnp.astype(np.int64), want)
+
+
+def test_invalid_backend_rejected():
+    with pytest.raises(ValueError):
+        cp.resolve_backend("tpu")
+
+
+def test_custom_plan_honoured_by_both_backends():
+    """A caller-supplied plan (wider bound for non-canonical residues) must
+    reach the kernel too, keeping the backends bit-identical."""
+    moduli = (47, 43, 41)
+    K = 16
+    plan = ChannelPlan.build(moduli, K * (2 * 47) ** 2)
+    rng = np.random.default_rng(21)
+    a = np.stack([rng.integers(0, 2 * m, (8, K)) for m in moduli]
+                 ).astype(np.int32)               # deliberately ≥ m
+    b = np.stack([rng.integers(0, 2 * m, (K, 8)) for m in moduli]
+                 ).astype(np.int32)
+    want = np.stack([(a[c].astype(np.int64) @ b[c]) % moduli[c]
+                     for c in range(len(moduli))])
+    for be in ("jnp", "pallas"):
+        got = np.asarray(cp.matmul(jnp.asarray(a), jnp.asarray(b), moduli,
+                                   backend=be, plan=plan,
+                                   block_m=8, block_n=8, block_k=16))
+        assert np.array_equal(got, want), be
+
+
+def test_signed_plan_parity_via_matmul():
+    """A signed plan through cp.matmul: raw signed activations replicated
+    per channel must give identical residues on both backends."""
+    moduli = (47, 43, 41)
+    K = 24
+    plan = ChannelPlan.for_matmul(moduli, K, signed=True)
+    rng = np.random.default_rng(13)
+    x = rng.integers(-127, 128, (8, K)).astype(np.int8)
+    w = rng.integers(-127, 128, (K, 8)).astype(np.int64)
+    a = jnp.asarray(np.stack([x] * len(moduli)))          # raw signed, C×
+    b = jnp.asarray(np.stack([np.mod(w, m) for m in moduli]), jnp.int8)
+    want = np.stack([np.mod(x.astype(np.int64) @ w, m) for m in moduli])
+    for be in ("jnp", "pallas"):
+        got = np.asarray(cp.matmul(a, b, moduli, backend=be, plan=plan,
+                                   block_m=8, block_n=8, block_k=8))
+        assert np.array_equal(got, want), be
+
+
+def test_mismatched_plan_rejected_by_kernel():
+    from repro.kernels import rns_matmul
+
+    plan = ChannelPlan.for_matmul((47, 43), 16, signed=True)
+    a = jnp.zeros((2, 8, 16), jnp.int8)
+    b = jnp.zeros((2, 16, 8), jnp.int8)
+    with pytest.raises(ValueError):
+        rns_matmul(a, b, (47, 43), plan=plan)     # signed plan, signed_a=False
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_wrong_moduli_plan_rejected_on_both_backends(backend):
+    plan = ChannelPlan.for_matmul((47, 43, 41), 16)
+    a = jnp.zeros((3, 8, 16), jnp.int8)
+    b = jnp.zeros((3, 16, 8), jnp.int8)
+    with pytest.raises(ValueError):
+        cp.matmul(a, b, (31, 29, 23), backend=backend, plan=plan)
+
+
+# ------------------------------------------------------------ rns_dense ----
+def test_rns_dense_pallas_executes_kernel(monkeypatch):
+    """backend="pallas" must actually run the Pallas kernel, bit-equal to
+    jnp."""
+    import importlib
+
+    kmod = importlib.import_module("repro.kernels.rns_matmul")
+    calls = []
+    orig = kmod.rns_matmul
+
+    def spy(*args, **kw):
+        calls.append(kw.get("signed_a", False))
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(kmod, "rns_matmul", spy)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((4, 96)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((96, 8)), jnp.float32)
+    y_jnp = np.asarray(rns_dense(x, w, "jnp"))
+    assert not calls
+    y_pal = np.asarray(rns_dense(x, w, "pallas"))
+    assert calls == [True]              # broadcast/signed_a mode reached it
+    assert np.array_equal(y_jnp, y_pal)
+
+
+def test_rns_dense_gradients_flow_under_pallas():
+    import jax
+
+    x = jnp.ones((4, 64), jnp.float32)
+    w = jnp.ones((64, 8), jnp.float32) * 0.01
+    gx, gw = jax.grad(lambda a, b: rns_dense(a, b, "pallas").sum(),
+                      argnums=(0, 1))(x, w)
+    assert gx.shape == x.shape and gw.shape == w.shape
+
+
+# ------------------------------------------------ seed golden regression ---
+# Captured from the pre-refactor (seed) implementation at commit 6fcda79 with
+# np.random.default_rng(1234): rns_dense float32 bytes and rns_int_matmul
+# int results must stay bit-identical across the ChannelPlan refactor.
+_GOLDEN_DENSE_HEX = (
+    "8832ec41ad846bc16204f34016b7d641e31c0541473a30c13436ce40c75825c156a201c1"
+    "d11e77c1c225b43f5343c1c186058241334770c0bfca67c0232b06c09b5c3f3f789a8ec0"
+    "5993d040a72106c1b31943c0b257043e21a33c41f224dbc0f2f375c111dc67417e7960c1"
+    "85ce3f3fb6d57241c2913b4086b505c17aed2d4166f42dc1787a6c40d54685be3428d73f"
+    "5a5f0c3fee4dc53fbf27003f3cc66a40899babc008797e412401a7412bebc8c0ec7489c1"
+    "d03c79bf2d48e7c0dd1b6e4199059cc0a29381c0998d7ac068cf6e4192a552bf5a7dbcc0"
+    "1f7502bf6ad53c403113c13fce8bc240e5c0dfc03acffcc0"
+)
+_GOLDEN_INT = [
+    [13054, -28337, -99920, 5955, 71239, 38149, -47096],
+    [-36770, -55487, -3000, 60927, -60173, -46359, -8877],
+    [42693, 48050, 94933, -59600, -34832, -1127, 22567],
+    [-21003, 39661, 44570, -12405, -91514, -536, 12236],
+    [57974, 56995, -42361, -37355, 25819, -1183, 27052],
+]
+
+
+def test_rns_dense_seed_golden_regression():
+    rng = np.random.default_rng(1234)
+    x = rng.standard_normal((6, 96)).astype(np.float32)
+    w = rng.standard_normal((96, 10)).astype(np.float32)
+    y = np.asarray(rns_dense(jnp.asarray(x), jnp.asarray(w)))
+    assert y.astype(np.float32).tobytes().hex() == _GOLDEN_DENSE_HEX
+    xq = rng.integers(-127, 128, (5, 64)).astype(np.int8)
+    wq = rng.integers(-127, 128, (64, 7)).astype(np.int8)
+    for broadcast in (True, False):
+        yi = np.asarray(rns_int_matmul(jnp.asarray(xq), jnp.asarray(wq),
+                                       broadcast=broadcast))
+        assert yi.astype(np.int64).tolist() == _GOLDEN_INT

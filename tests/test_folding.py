@@ -1,7 +1,7 @@
 """Fold ("squeezing") ladder — the TPU adaptation of Stage ④ (DESIGN.md §8.3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips
 
 from repro.core.folding import (INT32_SAFE, fold_np, fold_schedule,
                                 max_subtracts, schedule_output_bound)

@@ -1,7 +1,7 @@
 """Twit adder substrate ([16], summarized in paper §IV-A)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips
 
 from repro.core.modadd import (AddTrace, addmod_twit, addmod_twit_np,
                                negate_twit, submod_twit)

@@ -1,7 +1,7 @@
 """The proposed multiplier (paper Alg. 1): correctness + structure claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips
 
 from repro.core.modmul import (StageTrace, group_weight, mulmod_twit,
                                mulmod_twit_np, num_groups, pp_tables,

@@ -1,6 +1,7 @@
 """15-bit limb arithmetic (TPU-native MRC recombination substrate)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # degrades to skips
 
 from repro.core import multiword as mw
 

@@ -7,7 +7,7 @@ framework rests on.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips
 
 from repro.core.modadd import addmod_twit
 from repro.core.modmul import mulmod_twit

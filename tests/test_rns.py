@@ -3,7 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips
 
 from repro.core.rns import (PAPER_N5_DYNAMIC_RANGE, PAPER_N5_MODULI, RNSBasis,
                             basis_for_accumulation, n8_channels, n11_channels,

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips
 
 from repro.core.quant import dequantize, quantize_int8
 from repro.core.rns_linear import reconstruct_mrc, rns_dense, rns_int_matmul

@@ -1,7 +1,7 @@
 """Twit representation (paper §IV-A): codec, redundancy, worked Example 2."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips
 
 from repro.core.twit import (Modulus, TwitOperand, admissible_deltas,
                              all_codewords, decode, encode, encode_all_forms)
