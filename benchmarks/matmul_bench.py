@@ -13,9 +13,19 @@ analysis, absolute ones are host-CPU):
   * int32      — direct int32 matmul (what the RNS path replaces exactly)
   * bf16       — the throughput ceiling XLA gives floating matmuls
 
+plus, per backend, the **conversion split** of the pipeline — forward
+conversion / channel matmul / MRC reverse conversion timed as composing
+stages (DESIGN.md §10) so the trajectory JSON captures how much of the
+integer pipeline the converter endpoints cost (the classic RNS overhead
+the ConversionPlan refactor targets),
+
 plus the exactness check that is the RNS path's reason to exist: at deep K,
 int32 einsum accumulation is exact only below 2^31 and fp32 rounds, while
 the RNS path reproduces the int64 oracle.
+
+``--smoke`` runs one tiny shape on BOTH backends with hard exactness
+asserts — the CI guard against conversion-path regressions that would
+otherwise only surface in perf runs.
 """
 from __future__ import annotations
 
@@ -26,12 +36,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rns_linear import rns_int_matmul
+from repro.core import channel_plan as cp
+from repro.core.conversion_plan import ConversionPlan
+from repro.core.rns_linear import _basis_for_k, rns_int_matmul
 
 SHAPES = [(64, 512, 64), (128, 2048, 128)]
+SMOKE_SHAPES = [(16, 64, 16)]
 # Pallas-interpret is python-per-grid-cell off-TPU: bench the small shape
 # there, every shape when the kernels compile natively.
-PALLAS_SHAPES = SHAPES if jax.default_backend() == "tpu" else SHAPES[:1]
+ON_TPU = jax.default_backend() == "tpu"
 
 
 def _time(fn, *args, reps: int = 5):
@@ -46,17 +59,48 @@ def _time(fn, *args, reps: int = 5):
     return best * 1e6, out
 
 
-def run():
+def _conversion_split(xq, wq, backend: str, reps: int = 3):
+    """Time the three pipeline stages of the RNS matmul separately.
+
+    Decomposed on the per-channel (paper-literal) mode, where the stages are
+    genuine boundaries that compose: forward converts BOTH operands, matmul
+    consumes pre-converted residues, reverse consumes the (C, M, N) epilogue
+    residues.  Each stage is its own jit'd callable, so the share is
+    reported against the *sum of the stages* — comparing against a fused
+    end-to-end timing would mix one dispatch overhead with three and can
+    push the "share" past 1.0 at small shapes.
+    """
+    K = xq.shape[-1]
+    basis = _basis_for_k(K)
+    conv = ConversionPlan.for_basis(basis)
+    moduli = tuple(int(m) for m in basis.moduli)
+    plan = cp.ChannelPlan.for_matmul(moduli, K)
+    fwd = jax.jit(lambda a, w: (conv.forward(a, backend=backend),
+                                conv.forward(w, backend=backend)))
+    mm = jax.jit(lambda ar, wr: cp.matmul(ar, wr, moduli, backend=backend,
+                                          plan=plan))
+    rev = jax.jit(lambda r: conv.reverse(r, backend=backend))
+    t_fwd, (a_res, w_res) = _time(fwd, xq, wq, reps=reps)
+    t_mm, res = _time(mm, a_res, w_res, reps=reps)
+    t_rev, out = _time(rev, res, reps=reps)
+    total = t_fwd + t_mm + t_rev
+    share = (t_fwd + t_rev) / total if total else float("nan")
+    return dict(forward=t_fwd, matmul=t_mm, reverse=t_rev, total=total,
+                share=share, out=out)
+
+
+def run(shapes=None, smoke: bool = False):
+    shapes = shapes or (SMOKE_SHAPES if smoke else SHAPES)
+    pallas_shapes = shapes if (ON_TPU or smoke) else shapes[:1]
     rows = []
     rng = np.random.default_rng(0)
-    for (M, K, N) in SHAPES:
+    for (M, K, N) in shapes:
         xq = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
         wq = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
         xf = xq.astype(jnp.bfloat16)
         wf = wq.astype(jnp.bfloat16)
 
         rns_jnp = jax.jit(functools.partial(rns_int_matmul, backend="jnp"))
-        rns_pal = jax.jit(functools.partial(rns_int_matmul, backend="pallas"))
         i32 = jax.jit(lambda a, b: jax.lax.dot_general(
             a.astype(jnp.int32), b.astype(jnp.int32),
             (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32))
@@ -69,6 +113,8 @@ def run():
         want = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
         exact = bool(np.allclose(np.asarray(got), want.astype(np.float64),
                                  rtol=2e-7))
+        if smoke:
+            assert exact, f"rns_jnp inexact at M{M}K{K}N{N}"
 
         tag = f"M{M}K{K}N{N}"
         line = (f"# {tag}: rns_jnp={t_jnp:.0f}us int32={t_i32:.0f}us "
@@ -76,18 +122,50 @@ def run():
                 f"rns_overhead_vs_int32={t_jnp / t_i32:.1f}x")
         rows.append((f"rns_matmul_jnp_{tag}", t_jnp,
                      f"exact={exact},vs_int32={t_jnp / t_i32:.2f}x"))
-        if (M, K, N) in PALLAS_SHAPES:
+        if (M, K, N) in pallas_shapes:
+            rns_pal = jax.jit(functools.partial(rns_int_matmul,
+                                                backend="pallas"))
             t_pal, got_pal = _time(rns_pal, xq, wq, reps=3)
             pal_exact = bool(np.allclose(np.asarray(got_pal),
                                          want.astype(np.float64), rtol=2e-7))
+            if smoke:
+                assert pal_exact, f"rns_pallas inexact at {tag}"
+                assert np.asarray(got_pal).tobytes() == \
+                    np.asarray(got).tobytes(), f"backend parity at {tag}"
             line += f" rns_pallas={t_pal:.0f}us pallas_exact={pal_exact}"
             rows.append((f"rns_matmul_pallas_{tag}", t_pal,
                          f"exact={pal_exact},vs_jnp={t_pal / t_jnp:.2f}x"))
         print(line)
+
+        # conversion share of the end-to-end path, per backend
+        backends = ["jnp"] + (["pallas"] if (M, K, N) in pallas_shapes
+                              else [])
+        for be in backends:
+            s = _conversion_split(xq, wq, be, reps=1 if smoke else 3)
+            if smoke:
+                # composed stages must still be the exact int64 product
+                assert bool(np.allclose(np.asarray(s["out"]),
+                                        want.astype(np.float64),
+                                        rtol=2e-7)), f"split {be} {tag}"
+            print(f"#   conv_split[{be}] fwd={s['forward']:.0f}us "
+                  f"matmul={s['matmul']:.0f}us reverse={s['reverse']:.0f}us "
+                  f"total={s['total']:.0f}us conv_share={s['share']:.2f}")
+            rows.append((f"rns_conv_split_{be}_{tag}", s["total"],
+                         f"fwd={s['forward']:.1f}us,rev={s['reverse']:.1f}us,"
+                         f"share={s['share']:.3f}"))
         rows.append((f"int32_matmul_{tag}", t_i32, ""))
         rows.append((f"bf16_matmul_{tag}", t_bf, ""))
+    if smoke:
+        print("# smoke OK: jnp and pallas conversion paths exact + parity")
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, both backends, hard exactness asserts"
+                         " (the CI conversion-regression guard)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

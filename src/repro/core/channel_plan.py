@@ -46,12 +46,22 @@ from .twit import Modulus, is_power_of_two
 __all__ = [
     "ChannelPlan",
     "BACKENDS",
+    "residue_dtype_for",
     "resolve_backend",
     "resolve_interpret",
     "matmul",
     "matmul_broadcast",
     "modmul",
 ]
+
+
+def residue_dtype_for(moduli):
+    """THE residue-dtype rule: int8 when every residue fits the MXU int8
+    operand registers, int32 otherwise (shared by ChannelPlan and the
+    conversion layer so forward converter and matmul plan can't diverge)."""
+    import jax.numpy as jnp
+
+    return jnp.int8 if max(moduli) <= 128 else jnp.int32
 
 BACKENDS = ("auto", "jnp", "pallas")
 
@@ -172,19 +182,9 @@ class ChannelPlan:
     @functools.cached_property
     def residue_dtype(self):
         """int8 when every residue fits the MXU int8 operand registers."""
-        import jax.numpy as jnp
-
-        return jnp.int8 if max(self.moduli) <= 128 else jnp.int32
+        return residue_dtype_for(self.moduli)
 
     # ------------------------------------------------------------ datapath --
-    def forward(self, x):
-        """Binary → residues: (…,) int → (C, …) canonical residues."""
-        import jax.numpy as jnp
-
-        x32 = x.astype(jnp.int32)
-        return jnp.stack([jnp.mod(x32, m).astype(self.residue_dtype)
-                          for m in self.moduli], axis=0)
-
     def apply_ladder(self, x, c: int | None = None, *, sched=None, m=None):
         """THE Stage-④ fold ladder + bounded canonicalization.
 
@@ -305,20 +305,27 @@ def matmul_broadcast(x, w, moduli, *, backend: str = "auto",
     import jax
     import jax.numpy as jnp
 
+    # Deferred import: conversion_plan sits on top of this dispatch layer.
+    from .conversion_plan import forward as forward_convert
+
     moduli = tuple(int(m) for m in moduli)
     K, N = w.shape
     plan = ChannelPlan.for_matmul(moduli, K, signed=True)
-    if resolve_backend(backend) == "pallas":
+    be = resolve_backend(backend)
+    # The ONE forward converter (DESIGN.md §10) — this used to be a third,
+    # inline mod loop.  Channel sets here need not be coprime bases (Table
+    # III n=11), hence the module-level converter rather than a full plan.
+    w_res = forward_convert(w, moduli, backend=be, interpret=interpret,
+                            dtype=plan.residue_dtype)        # (C, K, N)
+    if be == "pallas":
         from repro.kernels.rns_matmul import rns_matmul
 
-        b_res = plan.forward(w)                              # (C, K, N)
-        return rns_matmul(x[None], b_res, moduli, signed_a=True, plan=plan,
+        return rns_matmul(x[None], w_res, moduli, signed_a=True, plan=plan,
                           interpret=resolve_interpret(interpret), **block_kw)
-    w_res = jnp.concatenate(
-        [jnp.mod(w.astype(jnp.int32), m).astype(plan.residue_dtype)
-         for m in moduli], axis=-1)                          # (K, C·N)
-    acc = jax.lax.dot_general(x, w_res, (((1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.int32)   # (M, C·N)
+    acc = jax.lax.dot_general(
+        x, w_res.transpose(1, 0, 2).reshape(K, -1),          # (K, C·N)
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)                    # (M, C·N)
     outs = [plan.fold_signed(acc[:, c * N:(c + 1) * N], c)
             for c in range(len(moduli))]
     return jnp.stack(outs, axis=0)

@@ -1,0 +1,236 @@
+"""ConversionPlan: the single source of truth for the RNS conversion boundary.
+
+The paper's system-level argument (§V) is that circuit-level wins only reach
+end-to-end latency when the *whole* pipeline — forward conversion, channel
+arithmetic, reverse conversion — is efficient; converter cost is the classic
+RNS overhead.  Before this module the endpoints were fragmented: forward
+conversion existed three times (host numpy in ``RNSBasis.forward``, jnp in
+``ChannelPlan.forward``, inline in ``matmul_broadcast``) and the MRC reverse
+converter was a Python O(k²) double loop over per-pair Python-int constants
+that re-emitted ~66 sequential jnp ops per trace and never touched Pallas.
+
+A :class:`ConversionPlan` reifies both endpoints once per basis
+(DESIGN.md §10):
+
+  * the dense (k, k) int32 MRC inverse table ``inv[j][i] = |m_i^{-1}|_{m_j}``
+    (zero-padded above the diagonal so it streams into a kernel as ONE device
+    constant);
+  * limb-Horner constants: dynamic range ``M``, the signed-embedding split
+    ``half = ⌈M/2⌉``, and the limb count covering M with carry headroom
+    (`core/multiword.py`);
+  * residue dtype selection (int8 when every residue fits the MXU operand
+    registers, int32 otherwise);
+  * device-admissibility: the limb Horner step is int32-safe only for
+    ``m ≤ 2^15`` (`multiword.MAX_HORNER_MODULUS`), checked loudly at
+    ``reverse`` time instead of failing deep inside limb asserts.
+
+On top of the plan sits the same backend-dispatch treatment as
+:class:`~repro.core.channel_plan.ChannelPlan`: :meth:`ConversionPlan.forward`
+and :meth:`ConversionPlan.reverse` accept ``backend="auto"|"jnp"|"pallas"``;
+the Pallas path is the fused `kernels/rns_convert.py` kernel (MRC digit
+extraction vectorized over the (j, i) triangular schedule, limb Horner
+recombination, signed-range correction, and optional fused dequant in one
+VMEM-resident pass), parity-tested bit-identical against the jnp twin and the
+CRT big-int oracle.
+
+Forward conversion does NOT require a pairwise-coprime set (it is a per-
+channel mod), so it is also exposed as the module-level :func:`forward` —
+usable for the Table III n=8/n=11 channel *sets* that are not coprime bases.
+The plan-level reverse converter does require a basis and validates it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import multiword as mw
+from .channel_plan import residue_dtype_for, resolve_backend, resolve_interpret
+
+__all__ = ["ConversionPlan", "forward"]
+
+
+# ------------------------------------------------------- forward converter --
+def forward(x, moduli: Sequence[int], *, backend: str = "auto",
+            interpret: Optional[bool] = None, dtype=None):
+    """THE forward converter: binary → residues, (…,) int → (C, …).
+
+    Channel c of the output holds ``|x|_{m_c}``; negative inputs map to the
+    coset representative (standard signed RNS embedding).  ``backend="jnp"``
+    is one broadcast ``jnp.mod`` over all channels; ``"pallas"`` runs the
+    `kernels/rns_convert.rns_forward` kernel; ``"auto"`` picks by device.
+    Both are bit-identical (integer mod is exact).
+
+    ``dtype`` defaults to int8 when every residue fits the MXU int8 operand
+    registers, int32 otherwise (the same rule as ``ChannelPlan``).
+    """
+    import jax.numpy as jnp
+
+    mods = tuple(int(m) for m in moduli)
+    if dtype is None:
+        dtype = residue_dtype_for(mods)
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels.rns_convert import rns_forward
+
+        res = rns_forward(x, mods, interpret=resolve_interpret(interpret))
+    else:
+        x32 = jnp.asarray(x).astype(jnp.int32)
+        table = jnp.asarray(np.asarray(mods, np.int32)).reshape(
+            (len(mods),) + (1,) * x32.ndim)
+        res = jnp.mod(x32[None], table)
+    return res.astype(dtype)
+
+
+# ------------------------------------------------------------------- plan ---
+@dataclasses.dataclass(frozen=True)
+class ConversionPlan:
+    """Frozen, hashable conversion plan for one RNS basis.
+
+    Hashability matters: plans ride through ``jax.jit`` static arguments and
+    into Pallas kernel closures, so equality/hash are derived purely from the
+    precomputed fields.
+    """
+
+    moduli: Tuple[int, ...]
+    M: int                                    # dynamic range = Π m_i
+    inv_rows: Tuple[Tuple[int, ...], ...]     # dense (k, k) MRC inverse table
+    nlimbs: int                               # limbs covering M + headroom
+
+    # ------------------------------------------------------------- builders -
+    @classmethod
+    def for_basis(cls, basis) -> "ConversionPlan":
+        """Plan for an :class:`~repro.core.rns.RNSBasis` (lru-cached)."""
+        return _build_plan(basis)
+
+    @classmethod
+    def build(cls, moduli: Sequence[int],
+              name: str | None = None) -> "ConversionPlan":
+        """Plan from a bare modulus tuple (validates pairwise coprimality)."""
+        from .rns import RNSBasis
+
+        mods = tuple(int(m) for m in moduli)
+        return _build_plan(RNSBasis(
+            name=name or "conv-" + "x".join(str(m) for m in mods),
+            moduli=mods))
+
+    # ----------------------------------------------------------- properties -
+    @property
+    def k(self) -> int:
+        return len(self.moduli)
+
+    @property
+    def half(self) -> int:
+        """Signed-embedding split: values ≥ ⌈M/2⌉ decode as negative."""
+        return (self.M + 1) // 2
+
+    @property
+    def device_reversible(self) -> bool:
+        """True iff every modulus admits the int32 limb-Horner step."""
+        return max(self.moduli) <= mw.MAX_HORNER_MODULUS
+
+    @functools.cached_property
+    def mods(self) -> np.ndarray:
+        return np.asarray(self.moduli, dtype=np.int32)
+
+    @functools.cached_property
+    def inv(self) -> np.ndarray:
+        """(k, k) int32 — the kernel-streamable MRC inverse table."""
+        return np.asarray(self.inv_rows, dtype=np.int32)
+
+    @functools.cached_property
+    def residue_dtype(self):
+        """int8 when every residue fits the MXU int8 operand registers."""
+        return residue_dtype_for(self.moduli)
+
+    # ------------------------------------------------------------ datapath --
+    def forward(self, x, *, backend: str = "auto",
+                interpret: Optional[bool] = None, dtype=None):
+        """Binary → residues: (…,) int → (k, …) canonical residues."""
+        return forward(x, self.moduli, backend=backend, interpret=interpret,
+                       dtype=dtype or self.residue_dtype)
+
+    def reverse(self, residues, *, backend: str = "auto",
+                interpret: Optional[bool] = None, scale=None):
+        """THE MRC reverse converter: (k, …) canonical int32 residues →
+        signed value as float32 (exact below 2^24 — accelerator dequant
+        precision).
+
+        Digits are computed with per-channel small-int ops (everything below
+        max(m_i)·m_j ≤ 2^30 before the mod), the Horner recombination runs
+        in 15-bit
+        limb arithmetic so no int64 exists anywhere on the device path, and
+        the signed-range correction subtracts M above ``half``
+        (DESIGN.md §10).  ``scale``, if given, broadcasts against the output
+        and is fused into the final multiply on both backends (identically,
+        so backends stay bit-equal).
+
+        ``backend="pallas"`` executes the fused `kernels/rns_convert.py`
+        kernel; ``"jnp"`` the fused-XLA twin; ``"auto"`` picks by device.
+        The two are bit-identical: digit extraction is exact integer
+        arithmetic and both run the same float32 limb-recombination sequence.
+        """
+        if not self.device_reversible:
+            raise ValueError(
+                f"moduli {self.moduli} exceed the int32 limb-Horner bound "
+                f"m ≤ {mw.MAX_HORNER_MODULUS}; the device MRC path cannot "
+                "host this basis — use the big-int oracle "
+                "(RNSBasis.to_signed) or a narrower channel width")
+        if resolve_backend(backend) == "pallas":
+            from repro.kernels.rns_convert import rns_reverse
+
+            return rns_reverse(residues, self, scale=scale,
+                               interpret=resolve_interpret(interpret))
+        return self._reverse_jnp(residues, scale)
+
+    def _reverse_jnp(self, residues, scale=None):
+        """Fused-XLA twin of the Pallas reverse kernel (bit-identical)."""
+        import jax.numpy as jnp
+
+        k = self.k
+        # ONE device constant for the whole triangular schedule — the
+        # per-(j, i) Python-int constants of the old reconstruct_mrc retraced
+        # ~k²/2 scalars per call.
+        inv = jnp.asarray(self.inv)
+        digits = []
+        for j in range(k):
+            t = residues[j].astype(jnp.int32)
+            mj = jnp.int32(self.moduli[j])
+            for i in range(j):
+                # d_i < m_i may exceed m_j (paper set: 1024 precedes 35), so
+                # one +m_j correction only bounds |t| < max(m_i, m_j); the
+                # product stays negative in that case and the FLOORED
+                # jnp.mod is what canonicalizes it — do not swap in a
+                # nonnegative-only reduction.  |t·inv| < max(m_i, m_j)·m_j
+                # ≤ 2^30: int32-safe for m ≤ 2^15.
+                t = t - digits[i]
+                t = jnp.where(t < 0, t + mj, t)
+                t = jnp.mod(t * inv[j, i], mj)
+            digits.append(t)
+        acc = mw.limbs_from_scalar(digits[-1], self.nlimbs)
+        for j in range(k - 2, -1, -1):
+            acc = mw.limbs_horner(acc, self.moduli[j], digits[j])
+        is_neg = mw.limbs_ge_const(acc, self.half)
+        pos = mw.limbs_to_float(acc)
+        neg = mw.limbs_to_float(mw.limbs_const_minus(self.M, acc))
+        out = jnp.where(is_neg, -neg, pos)
+        if scale is not None:
+            out = out * scale
+        return out
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"ConversionPlan(k={self.k}, M≈2^{self.M.bit_length() - 1}, "
+                f"nlimbs={self.nlimbs})")
+
+
+@functools.lru_cache(maxsize=256)
+def _build_plan(basis) -> ConversionPlan:
+    # `mrc_inverses` is already the dense zero-padded (k, k) table and is
+    # cached on the (hashable) basis; coprimality was validated at basis
+    # construction.
+    return ConversionPlan(
+        moduli=tuple(int(m) for m in basis.moduli),
+        M=basis.M,
+        inv_rows=basis.mrc_inverses,
+        nlimbs=mw.nlimbs_for(basis.M))

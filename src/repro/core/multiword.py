@@ -22,6 +22,8 @@ import numpy as np
 __all__ = [
     "LIMB_BITS",
     "LIMB_MASK",
+    "MAX_HORNER_MODULUS",
+    "nlimbs_for",
     "to_limbs_const",
     "limbs_from_scalar",
     "limbs_horner",
@@ -32,6 +34,19 @@ __all__ = [
 
 LIMB_BITS = 15
 LIMB_MASK = (1 << LIMB_BITS) - 1
+# `limbs_horner` keeps every limb product int32-safe only for m ≤ 2^15 — the
+# device-path admissibility bound `ConversionPlan` validates against.
+MAX_HORNER_MODULUS = 1 << LIMB_BITS
+
+
+def nlimbs_for(value: int, headroom_bits: int = 2) -> int:
+    """Limb count covering `value` plus carry headroom.
+
+    The MRC accumulator intermittently exceeds the dynamic range by up to one
+    Horner step before normalization; 2 extra bits cover it (asserted by the
+    round-trip property tests).
+    """
+    return (value.bit_length() + headroom_bits + LIMB_BITS - 1) // LIMB_BITS
 
 
 def to_limbs_const(value: int, nlimbs: int) -> tuple[int, ...]:

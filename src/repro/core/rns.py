@@ -128,12 +128,29 @@ class RNSBasis:
         return v - self.M if v >= (self.M + 1) // 2 else v
 
     # --------------------------------------------------------- forward -----
-    def forward(self, x) -> np.ndarray:
-        """Binary → residues.  Accepts ints / numpy arrays (any int dtype).
+    def forward(self, x):
+        """Binary → residues.  Channel i holds |x|_{m_i}; negative inputs map
+        to the coset representative (standard signed RNS embedding).
 
-        Channel i of the output holds |x|_{m_i}; negative inputs map to the
-        representative of the coset (standard signed RNS embedding).
+        Two deliberately different paths (DESIGN.md §10):
+
+        * **jax arrays** delegate to the `ConversionPlan` jnp converter —
+          the device datapath (vectorized int32 mod, residue-dtype output).
+          Previously device arrays silently round-tripped through host numpy
+          (object dtype for weakly-typed inputs), breaking jit and device
+          residency.
+        * **Python ints / numpy arrays** keep the big-int object path: this
+          is the CRT/MRC *oracle*, and exactness beyond 64 bits (M ≈ 2^65
+          for the paper set) needs host Python integers.
         """
+        try:
+            import jax
+        except ImportError:        # numpy-only use of the oracle layer
+            jax = None
+        if jax is not None and isinstance(x, jax.Array):
+            from .conversion_plan import ConversionPlan
+
+            return ConversionPlan.for_basis(self).forward(x)
         xs = np.asarray(x)
         if xs.dtype == object or xs.dtype.kind not in "iu":
             xs = xs.astype(object)

@@ -17,6 +17,12 @@ entirely in the paper's residue arithmetic:
   4. Mixed-Radix (MRC) reverse conversion in int32 limb arithmetic
      (TPU-native: no int64 anywhere), signed-range correction, dequantize.
 
+Both conversion endpoints (steps 2 and 4) are owned by
+`core/conversion_plan.ConversionPlan` (DESIGN.md §10) and honour the same
+``backend`` switch as the matmul core: under ``backend="pallas"`` the whole
+quantize → forward → matmul → reverse → dequant pipeline runs through Pallas
+kernels (`kernels/{rns_convert,rns_matmul}.py`) with no host round-trips.
+
 Backward: straight-through estimator — gradients flow as if the layer were a
 dense f32 matmul (`jax.custom_vjp`); the forward is *exactly* the int8
 product (tested against an int64 oracle), so training sees a deterministic
@@ -25,13 +31,12 @@ quantized forward with full-precision gradients, the standard QAT setup.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import channel_plan as cp
-from . import multiword as mw
+from .conversion_plan import ConversionPlan
 from .quant import quantize_int8
 from .rns import RNSBasis, basis_for_accumulation
 
@@ -43,41 +48,24 @@ def _basis_for_k(k: int) -> RNSBasis:
     return basis_for_accumulation(k * 127 * 127, name=f"rns-dense-k{k}")
 
 
-def reconstruct_mrc(residues, basis: RNSBasis):
+def reconstruct_mrc(residues, basis: RNSBasis, *, backend: str = "auto",
+                    interpret: bool | None = None, scale=None):
     """(C, ...) int32 canonical residues → signed value as float32.
 
-    MRC digits are computed with per-channel small-int ops (everything below
-    m_j² < 2^12 before the mod); the Horner recombination runs in 15-bit limb
-    arithmetic (`multiword`) so no int64 is ever needed — this is the reverse
-    converter of DESIGN.md §4 step 4.
+    Thin compatibility wrapper over `ConversionPlan.reverse` — THE MRC
+    reverse converter (DESIGN.md §10): digits from a single device-constant
+    inverse table, Horner recombination in 15-bit limb arithmetic
+    (`multiword`), signed-range correction; ``backend="pallas"`` runs the
+    fused `kernels/rns_convert.py` kernel, ``scale`` fuses the dequant
+    multiply.
     """
-    moduli = basis.moduli
-    k = len(moduli)
-    inv = basis.mrc_inverses
-    digits = []
-    for j in range(k):
-        t = residues[j]
-        for i in range(j):
-            # (t − d_i) may be negative: one conditional +m_j, then multiply
-            # by the precomputed inverse and reduce.
-            t = t - digits[i]
-            t = jnp.where(t < 0, t + moduli[j], t)
-            t = jnp.mod(t * inv[j][i], moduli[j])
-        digits.append(t)
-    nlimbs = (basis.M.bit_length() + 2 + mw.LIMB_BITS - 1) // mw.LIMB_BITS
-    acc = mw.limbs_from_scalar(digits[-1], nlimbs)
-    for j in range(k - 2, -1, -1):
-        acc = mw.limbs_horner(acc, moduli[j], digits[j])
-    half = (basis.M + 1) // 2
-    is_neg = mw.limbs_ge_const(acc, half)
-    pos = mw.limbs_to_float(acc)
-    neg = mw.limbs_to_float(mw.limbs_const_minus(basis.M, acc))
-    return jnp.where(is_neg, -neg, pos)
+    return ConversionPlan.for_basis(basis).reverse(
+        residues, backend=backend, interpret=interpret, scale=scale)
 
 
 def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
                    broadcast: bool = True, *, backend: str = "auto",
-                   interpret: bool | None = None):
+                   interpret: bool | None = None, scale=None):
     """Exact int8 matmul through residue channels: (M,K)×(K,N) → f32 (M,N).
 
     The result equals the int64 product exactly for any K admitted by the
@@ -86,25 +74,38 @@ def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
     broadcast-operand datapath (default; see `channel_plan.matmul_broadcast`:
     activations stay raw signed int8, only weights are forward-converted) vs
     the paper-literal per-channel conversion (the §Perf baseline).
-    ``backend``/``interpret`` select the execution engine (DESIGN.md §7):
-    "jnp" (fused XLA), "pallas" (the kernels), or "auto" (by device).
+
+    ``backend``/``interpret`` select the execution engine end-to-end
+    (DESIGN.md §7/§10): forward conversion, channel matmul, and MRC reverse
+    conversion all dispatch on it — "jnp" (fused XLA), "pallas" (the
+    kernels), or "auto" (by device).  ``scale``, if given, broadcasts against
+    the (M, N) output and fuses the dequant multiply into the reverse
+    converter.
     """
     basis = basis or _basis_for_k(xq.shape[-1])
     moduli = tuple(int(m) for m in basis.moduli)
+    conv = ConversionPlan.for_basis(basis)
     if broadcast:
         res = cp.matmul_broadcast(xq, wq, moduli, backend=backend,
                                   interpret=interpret)
     else:
         plan = cp.ChannelPlan.for_matmul(moduli, xq.shape[-1])
-        res = cp.matmul(plan.forward(xq), plan.forward(wq), moduli,
+        a_res = conv.forward(xq, backend=backend, interpret=interpret)
+        b_res = conv.forward(wq, backend=backend, interpret=interpret)
+        res = cp.matmul(a_res, b_res, moduli,
                         backend=backend, interpret=interpret, plan=plan)
-    return reconstruct_mrc(res, basis)
+    return conv.reverse(res, backend=backend, interpret=interpret,
+                        scale=scale)
 
 
 def _rns_dense_fwd_impl(x, w, backend):
     xq, sx = quantize_int8(x, axis=-1)        # per-row
     wq, sw = quantize_int8(w, axis=0)         # per-column
     y = rns_int_matmul(xq, wq, backend=backend)
+    # Deliberately NOT scale=sx*sw (the fused-dequant path): f32 multiply is
+    # non-associative and (y·sx)·sw is the seed-golden-pinned order — fusing
+    # changes output bits by ~1 ulp.  Callers without that constraint get
+    # the fused epilogue via rns_int_matmul(scale=...).
     return (y * sx * sw).astype(x.dtype)
 
 
@@ -131,8 +132,13 @@ _rns_dense.defvjp(_fwd, _bwd)
 def rns_dense(x, w, backend: str = "auto"):
     """y = x @ w with the integer core in RNS; straight-through backward.
 
-    ``backend`` plumbs through to the Stage-④ dispatch layer: "auto" (Pallas
-    on TPU, fused XLA elsewhere), "jnp", or "pallas" — both produce
-    bit-identical residues (parity-tested across the paper channel sets).
+    Pipeline (DESIGN.md §4, conversion endpoints §10): quantize → forward
+    conversion → per-channel matmul → MRC reverse conversion → dequantize.
+    ``backend`` selects the execution engine for the *whole* pipeline —
+    Stage-④ dispatch AND both conversion endpoints: "auto" (Pallas on TPU,
+    fused XLA elsewhere), "jnp", or "pallas".  Both produce bit-identical
+    outputs (parity-tested across the paper channel sets), and under
+    "pallas" forward conversion, matmul, and reverse conversion all run as
+    Pallas kernels with no host round-trips.
     """
     return _rns_dense(x, w, backend)

@@ -4,8 +4,12 @@ Kernels (each with a pure-jnp oracle in `ref.py`):
   rns_matmul      — per-channel RNS matmul, deferred fold epilogue (the
                     paper's multiplier organization at tile granularity)
   rns_modmul      — elementwise modular multiply over residue channels
+  rns_forward     — forward conversion (binary → residue planes)
+  rns_reverse     — fused MRC reverse conversion (digits + limb Horner +
+                    signed correction + dequant in one VMEM pass)
   fold            — standalone Stage-④ squeeze/canonicalize
   flash_attention — blocked online-softmax attention (causal/SWA/softcap)
 """
 from . import ref  # noqa: F401
-from .ops import flash_attention, fold, rns_matmul, rns_modmul  # noqa: F401
+from .ops import (flash_attention, fold, rns_forward, rns_matmul,  # noqa: F401
+                  rns_modmul, rns_reverse)

@@ -11,19 +11,33 @@ arguments.  Callers can force either mode.
 from __future__ import annotations
 
 from repro.core.channel_plan import resolve_interpret
+from repro.core.conversion_plan import ConversionPlan
 
 from . import ref
 from .flash_attention import flash_attention as _flash_attention
 from .fold import fold as _fold
+from .rns_convert import rns_forward as _rns_forward
+from .rns_convert import rns_reverse as _rns_reverse
 from .rns_matmul import rns_matmul as _rns_matmul
 from .rns_modmul import rns_modmul as _rns_modmul
 
-__all__ = ["rns_matmul", "rns_modmul", "fold", "flash_attention", "ref"]
+__all__ = ["rns_matmul", "rns_modmul", "rns_forward", "rns_reverse", "fold",
+           "flash_attention", "ref"]
 
 
 def rns_matmul(a_res, b_res, moduli, *, interpret=None, **kw):
     return _rns_matmul(a_res, b_res, tuple(int(m) for m in moduli),
                        interpret=interpret, **kw)
+
+
+def rns_forward(x, moduli, *, interpret=None, **kw):
+    return _rns_forward(x, tuple(int(m) for m in moduli),
+                        interpret=interpret, **kw)
+
+
+def rns_reverse(residues, moduli, *, interpret=None, **kw):
+    return _rns_reverse(residues, ConversionPlan.build(moduli),
+                        interpret=interpret, **kw)
 
 
 def rns_modmul(a_res, b_res, moduli, *, interpret=None, **kw):

@@ -15,11 +15,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.channel_plan import ChannelPlan
+from repro.core.conversion_plan import ConversionPlan
+from repro.core.conversion_plan import forward as _forward_convert
 
 __all__ = [
     "channel_schedules",
     "rns_matmul_ref",
     "rns_modmul_ref",
+    "rns_forward_ref",
+    "rns_reverse_ref",
     "fold_ref",
     "attention_ref",
 ]
@@ -65,6 +69,29 @@ def rns_modmul_ref(a_res, b_res, moduli: Sequence[int]):
     p = a_res.astype(jnp.int32) * b_res.astype(jnp.int32)
     return jnp.stack([plan.apply_ladder(p[c], c)
                       for c in range(plan.k)], axis=0)
+
+
+def rns_forward_ref(x, moduli: Sequence[int]):
+    """Oracle for the forward-conversion kernel: (…,) int → (C, …) int32.
+
+    Delegates to the jnp twin in `conversion_plan` — the ONE forward
+    converter (DESIGN.md §10) — pinned to int32 like the kernel output.
+    """
+    import jax.numpy as jnp
+
+    return _forward_convert(x, tuple(int(m) for m in moduli), backend="jnp",
+                            dtype=jnp.int32)
+
+
+def rns_reverse_ref(residues, moduli: Sequence[int], scale=None):
+    """Oracle for the fused MRC reverse kernel: (C, …) residues → (…) f32.
+
+    Delegates to `ConversionPlan`'s jnp twin; the kernel replays the same
+    integer digit schedule and float32 limb recombination, so agreement is
+    bit-exact.
+    """
+    return ConversionPlan.build(tuple(int(m) for m in moduli)).reverse(
+        residues, backend="jnp", scale=scale)
 
 
 def fold_ref(x, moduli: Sequence[int], bound: int):

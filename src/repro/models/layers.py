@@ -12,9 +12,13 @@ Linear layers dispatch on cfg.linear_backend:
   * "rns_int8" — the paper's RNS integer matmul (`core/rns_linear.rns_dense`):
                  exact int8 product through 2^5±δ residue channels with
                  deferred folding, straight-through gradients.  An optional
-                 ":auto" / ":jnp" / ":pallas" suffix selects the Stage-④
-                 execution engine (core/channel_plan backend dispatch), e.g.
-                 "rns_int8:pallas" runs the Pallas kernels.
+                 ":auto" / ":jnp" / ":pallas" suffix selects the execution
+                 engine for the WHOLE integer pipeline — forward conversion,
+                 Stage-④ channel matmul, and MRC reverse conversion
+                 (core/{channel_plan,conversion_plan} backend dispatch,
+                 DESIGN.md §7/§10) — e.g. "rns_int8:pallas" runs quantize →
+                 forward → matmul → reverse through the Pallas kernels with
+                 no host round-trips.
 """
 from __future__ import annotations
 
@@ -48,7 +52,8 @@ def linear(x, w, backend: str = "bf16"):
     """x: (..., d_in) @ w: (d_in, d_out) under the selected backend.
 
     ``backend`` is "bf16" or "rns_int8" with an optional kernel-backend
-    suffix ("rns_int8:pallas" / "rns_int8:jnp" / "rns_int8:auto").
+    suffix ("rns_int8:pallas" / "rns_int8:jnp" / "rns_int8:auto") that
+    drives conversion AND matmul engines end-to-end (DESIGN.md §10).
     """
     name, _, kernel_backend = backend.partition(":")
     if name == "rns_int8":

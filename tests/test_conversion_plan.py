@@ -1,0 +1,230 @@
+"""ConversionPlan: the unified conversion boundary (DESIGN.md §10).
+
+Covers the acceptance criteria of the conversion refactor:
+  * forward∘reverse == id over the signed dynamic range (negative operands
+    included) for the paper-n5, tau, and auto-sized accumulation bases —
+    exact below the float32 dequant precision (2^24), ulp-accurate above;
+  * jnp and Pallas backends are bit-identical for both converters (and for
+    the fused-dequant scale path);
+  * exactly one MRC reverse converter exists: `reconstruct_mrc` and the
+    kernel oracle both delegate to `ConversionPlan.reverse`;
+  * `RNSBasis.forward` routes device arrays to the plan and keeps the
+    big-int object path for the Python oracle;
+  * device-inadmissible bases (m > 2^15) and non-coprime channel sets fail
+    loudly at the right layer.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st  # degrades to skips
+
+from repro.core import conversion_plan as cv
+from repro.core.conversion_plan import ConversionPlan
+from repro.core.multiword import MAX_HORNER_MODULUS, nlimbs_for
+from repro.core.rns import (N11_CHANNELS, basis_for_accumulation,
+                            paper_n5_basis, tau_basis)
+from repro.core.rns_linear import reconstruct_mrc
+
+BASES = {
+    "paper-n5": paper_n5_basis(),                    # k=12, M ≈ 2^65
+    "tau-14": tau_basis(14),                         # classical 3-mod set
+    "acc-k256": basis_for_accumulation(256 * 127 * 127),
+}
+
+
+def _residues_of(values, basis):
+    """Big-int oracle forward conversion → (k, len(values)) int32."""
+    return np.stack([np.array([int(v) % m for v in values])
+                     for m in basis.moduli]).astype(np.int32)
+
+
+def _signed_range(basis):
+    return -((basis.M - 1) // 2), basis.M // 2
+
+
+# ------------------------------------------------------------- round trip --
+@pytest.mark.parametrize("name", sorted(BASES))
+def test_roundtrip_exact_below_dequant_precision(name):
+    """reverse(forward(x)) == x exactly for |x| < 2^24, negatives included."""
+    basis = BASES[name]
+    plan = ConversionPlan.for_basis(basis)
+    lo, hi = _signed_range(basis)
+    cap = min(2**24 - 1, hi - 1)
+    rng = np.random.default_rng(7)
+    vals = np.concatenate([
+        np.array([0, 1, -1, cap, -min(2**24 - 1, -lo - 1)]),
+        rng.integers(-min(2**24 - 1, -lo - 1), cap, 64),
+    ])
+    res = jnp.asarray(_residues_of(vals, basis))
+    for backend in ("jnp", "pallas"):
+        got = np.asarray(plan.reverse(res, backend=backend))
+        assert np.array_equal(got.astype(np.int64), vals), backend
+
+
+@pytest.mark.parametrize("name", sorted(BASES))
+def test_roundtrip_full_dynamic_range(name):
+    """Full signed range: backends bit-identical, ulp-accurate vs the CRT
+    big-int oracle (float32 rounds above 2^24 by design)."""
+    basis = BASES[name]
+    plan = ConversionPlan.for_basis(basis)
+    lo, hi = _signed_range(basis)
+    rng = np.random.default_rng(11)
+    vals = [lo, hi - 1, 0] + [
+        int(rng.integers(0, 2**62)) % (hi - lo) + lo for _ in range(64)]
+    res = jnp.asarray(_residues_of(vals, basis))
+    got_j = np.asarray(plan.reverse(res, backend="jnp"))
+    got_p = np.asarray(plan.reverse(res, backend="pallas"))
+    assert got_j.tobytes() == got_p.tobytes()
+    for v, g in zip(vals, got_j.astype(np.float64)):
+        # signed-range correction must pick the right sign, and the limb
+        # recombination is within float32 rounding of the oracle value
+        assert abs(g - v) <= abs(v) * 2.0**-20 + 0.5, (v, g)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(sorted(BASES)), st.data())
+def test_roundtrip_property(name, data):
+    basis = BASES[name]
+    plan = ConversionPlan.for_basis(basis)
+    lo, hi = _signed_range(basis)
+    x = data.draw(st.integers(lo, hi - 1))
+    got = float(np.asarray(plan.reverse(
+        jnp.asarray(_residues_of([x], basis)))[0]))
+    if abs(x) < 2**24:
+        assert got == x
+    else:
+        assert abs(got - x) <= abs(x) * 2.0**-20
+
+
+# -------------------------------------------------------- forward parity ---
+@pytest.mark.parametrize("name", sorted(BASES))
+def test_forward_backend_parity(name):
+    basis = BASES[name]
+    plan = ConversionPlan.for_basis(basis)
+    rng = np.random.default_rng(3)
+    x = rng.integers(-(2**20), 2**20, (6, 9)).astype(np.int32)
+    want = np.stack([np.mod(x.astype(np.int64), m) for m in basis.moduli])
+    f_j = np.asarray(plan.forward(jnp.asarray(x), backend="jnp"))
+    f_p = np.asarray(plan.forward(jnp.asarray(x), backend="pallas"))
+    assert np.array_equal(f_j, f_p)
+    assert np.array_equal(f_j.astype(np.int64), want)
+
+
+def test_forward_accepts_non_coprime_channel_sets():
+    """Table III n=11 channels are no basis (gcd 5), but per-channel forward
+    conversion is well-defined — the module-level converter handles it."""
+    rng = np.random.default_rng(5)
+    x = rng.integers(-127, 128, (4, 8)).astype(np.int8)
+    want = np.stack([np.mod(x.astype(np.int64), m) for m in N11_CHANNELS])
+    for backend in ("jnp", "pallas"):
+        got = np.asarray(cv.forward(jnp.asarray(x), N11_CHANNELS,
+                                    backend=backend))
+        assert np.array_equal(got.astype(np.int64), want), backend
+    with pytest.raises(ValueError):
+        ConversionPlan.build(N11_CHANNELS)     # reverse NEEDS a coprime basis
+
+
+# -------------------------------------------------------- reverse parity ---
+@pytest.mark.parametrize("name", sorted(BASES))
+def test_reverse_backend_parity_2d(name):
+    """(C, M, N)-shaped residues (the matmul epilogue shape) reverse
+    bit-identically on both backends, incl. the fused-dequant scale path."""
+    basis = BASES[name]
+    plan = ConversionPlan.for_basis(basis)
+    rng = np.random.default_rng(13)
+    res = jnp.asarray(np.stack(
+        [rng.integers(0, m, (5, 12)) for m in basis.moduli]).astype(np.int32))
+    scale = jnp.asarray(rng.standard_normal((5, 12)).astype(np.float32))
+    r_j = np.asarray(plan.reverse(res, backend="jnp"))
+    r_p = np.asarray(plan.reverse(res, backend="pallas"))
+    assert r_j.shape == (5, 12) and r_j.tobytes() == r_p.tobytes()
+    s_j = np.asarray(plan.reverse(res, backend="jnp", scale=scale))
+    s_p = np.asarray(plan.reverse(res, backend="pallas", scale=scale))
+    assert s_j.tobytes() == s_p.tobytes()
+    assert s_j.tobytes() == np.asarray(r_j * np.asarray(scale)).tobytes()
+
+
+def test_reverse_kernel_blocking_invariance():
+    """Block size must not change results (pad lanes are sliced off)."""
+    basis = BASES["acc-k256"]
+    plan = ConversionPlan.for_basis(basis)
+    rng = np.random.default_rng(17)
+    res = jnp.asarray(np.stack(
+        [rng.integers(0, m, 1000) for m in basis.moduli]).astype(np.int32))
+    from repro.kernels.rns_convert import rns_reverse
+
+    full = np.asarray(rns_reverse(res, plan, block=1024))
+    small = np.asarray(rns_reverse(res, plan, block=64))
+    assert full.tobytes() == small.tobytes()
+
+
+def test_reconstruct_mrc_delegates_to_plan(monkeypatch):
+    """`reconstruct_mrc` is a wrapper — the ONE reverse converter is
+    ConversionPlan.reverse (acceptance criterion)."""
+    basis = BASES["acc-k256"]
+    calls = []
+    orig = ConversionPlan.reverse
+
+    def spy(self, residues, **kw):
+        calls.append(kw.get("backend"))
+        return orig(self, residues, **kw)
+
+    monkeypatch.setattr(ConversionPlan, "reverse", spy)
+    res = jnp.asarray(_residues_of([42, -42], basis))
+    got = np.asarray(reconstruct_mrc(res, basis, backend="jnp"))
+    assert calls == ["jnp"]
+    assert got.astype(np.int64).tolist() == [42, -42]
+
+
+# ------------------------------------------------------------- plan/infra --
+def test_plan_is_cached_and_hashable():
+    p1 = ConversionPlan.for_basis(BASES["paper-n5"])
+    p2 = ConversionPlan.for_basis(paper_n5_basis())
+    assert p1 is p2                       # lru-cached construction
+    assert hash(p1) == hash(p2)           # rides jit static args
+    assert p1.nlimbs == nlimbs_for(BASES["paper-n5"].M)
+    assert p1.inv.shape == (12, 12)
+    assert p1.inv.dtype == np.int32
+
+
+def test_device_inadmissible_basis_rejected():
+    plan = ConversionPlan.for_basis(tau_basis(22))   # m up to 2^22 + 1
+    assert not plan.device_reversible
+    assert max(plan.moduli) > MAX_HORNER_MODULUS
+    res = jnp.asarray(np.zeros((3, 2), np.int32))
+    with pytest.raises(ValueError, match="limb-Horner"):
+        plan.reverse(res)
+    # forward conversion has no limb constraint
+    out = plan.forward(jnp.asarray(np.array([7, -7])))
+    assert out.dtype == jnp.int32
+
+
+def test_rnsbasis_forward_device_vs_oracle_split():
+    basis = BASES["paper-n5"]
+    x = np.array([5, -7, 1023, -(2**20)], np.int32)
+    dev = basis.forward(jnp.asarray(x))
+    assert isinstance(dev, jnp.ndarray)    # no silent host round-trip
+    host = basis.forward(x)
+    assert isinstance(host, np.ndarray)
+    assert np.array_equal(np.asarray(dev, np.int64).astype(object),
+                          host.astype(object))
+    # big-int oracle path survives beyond int64
+    r = basis.forward(basis.M - 1)
+    assert basis.to_int([int(t) for t in r]) == basis.M - 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_forward_reverse_jnp_pallas_property(data):
+    """Random residue planes (valid by CRT) reverse identically on both
+    backends — the kernel parity criterion, hypothesis-driven."""
+    basis = BASES[data.draw(st.sampled_from(sorted(BASES)))]
+    plan = ConversionPlan.for_basis(basis)
+    n = data.draw(st.integers(1, 16))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    res = jnp.asarray(np.stack(
+        [rng.integers(0, m, n) for m in basis.moduli]).astype(np.int32))
+    r_j = np.asarray(plan.reverse(res, backend="jnp"))
+    r_p = np.asarray(plan.reverse(res, backend="pallas"))
+    assert r_j.tobytes() == r_p.tobytes()

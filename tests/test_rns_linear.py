@@ -25,12 +25,13 @@ def test_exactness_vs_int64(M, K, N):
         assert np.allclose(got, want.astype(np.float64), rtol=2e-7)
 
 
-def test_reconstruct_signed():
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_reconstruct_signed(backend):
     basis = basis_for_accumulation(10_000)
     vals = np.array([-9999, -1, 0, 1, 4242, 9999], dtype=np.int64)
     res = jnp.stack([jnp.asarray(np.mod(vals, m).astype(np.int32))
                      for m in basis.moduli])
-    got = np.asarray(reconstruct_mrc(res, basis))
+    got = np.asarray(reconstruct_mrc(res, basis, backend=backend))
     assert np.array_equal(got.astype(np.int64), vals)
 
 
