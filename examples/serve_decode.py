@@ -1,4 +1,5 @@
-"""Batched serving with the decode engine (prefill + stepwise decode).
+"""Batched serving with the decode engine (mask-correct ragged prompts,
+on-device scan decode — DESIGN.md §11).
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -17,4 +18,5 @@ outs = eng.generate(prompts, max_new_tokens=16, temperature=0.8, seed=7)
 for p, o in zip(prompts, outs):
     print(f"prompt {p} -> {o[len(p):]}")
 print("served", sum(len(o) - len(p) for p, o in zip(prompts, outs)),
-      "tokens with ring-buffer SWA caches")
+      "tokens with ring-buffer SWA caches (one device sync, zero per-token"
+      " host round-trips)")

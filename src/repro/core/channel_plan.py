@@ -139,13 +139,16 @@ class ChannelPlan:
                    signed: bool = False) -> "ChannelPlan":
         """Plan for a K-deep deferred-reduction matmul.
 
-        Unsigned (per-channel residues): |acc| ≤ K·max(m−1)².  Signed
-        (broadcast-operand mode, raw int8 activations): |acc| ≤
-        K·127·max(m−1) and the accumulator may be negative.
+        Unsigned (per-channel residues, canonical in [0, m)): |acc| ≤
+        K·max(m−1)².  Signed (broadcast-operand mode, raw int8 activations):
+        |acc| ≤ K·128·max(m−1) — 128, not 127: `rns_int_matmul` admits
+        arbitrary int8 operands, and int8 is asymmetric (min = −128), so
+        the user-facing operand bound must cover −128 or the fold ladder
+        can under-fold (`tests/test_rns_linear.py` regression).
         """
         mods = tuple(int(m) for m in moduli)
         if signed:
-            bound = int(k) * 127 * max(m - 1 for m in mods)
+            bound = int(k) * 128 * max(m - 1 for m in mods)
         else:
             bound = int(k) * max((m - 1) ** 2 for m in mods)
         if bound > INT32_SAFE:

@@ -45,7 +45,10 @@ __all__ = ["rns_dense", "rns_int_matmul", "reconstruct_mrc"]
 
 @functools.lru_cache(maxsize=64)
 def _basis_for_k(k: int) -> RNSBasis:
-    return basis_for_accumulation(k * 127 * 127, name=f"rns-dense-k{k}")
+    # 128², not 127²: rns_int_matmul advertises exactness for ANY int8
+    # operands, and int8's minimum is −128 — the dynamic range must cover
+    # K·(−128)·(−128) even though quantize_int8 itself never emits −128.
+    return basis_for_accumulation(k * 128 * 128, name=f"rns-dense-k{k}")
 
 
 def reconstruct_mrc(residues, basis: RNSBasis, *, backend: str = "auto",

@@ -29,10 +29,10 @@ __all__ = ["flash_attention"]
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _kernel(pad_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             nk: int, bq: int, bk: int, sq: int, sk: int,
             causal: bool, window: int | None, softcap: float | None,
-            scale: float):
+            scale: float, masked: bool):
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -71,12 +71,21 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             mask &= kpos <= qpos
         if window is not None:
             mask &= kpos > qpos - window
+        if masked:
+            # per-sequence left-pad validity: keys in the first pad_b slots
+            # belong to padding and must not be attended (the mask-correct
+            # ragged-batch path; causal/window are shift-invariant under the
+            # common per-sequence offset, so only validity changes here).
+            mask &= kpos >= pad_ref[0]
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]                       # (bq, 1)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(s - m_new)                    # (bq, bk)
+        # re-mask after the shift: on a fully-masked row m_new == NEG_INF and
+        # exp(s − m_new) == 1 for every (masked) key — without this the row's
+        # l never stays 0 and the finalize-time zeroing cannot trigger.
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)       # (bq, bk)
         alpha = jnp.exp(m_prev - m_new)           # (bq, 1)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -93,17 +102,25 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "softcap", "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
-                    softcap: float | None = None,
+                    softcap: float | None = None, pad=None,
                     block_q: int = 256, block_k: int = 256,
                     interpret: bool = True):
     """(B, H, Sq, D) × (B, H, Sk, D)² → (B, H, Sq, D).
 
     Sq may differ from Sk (decode: Sq=1 vs cached Sk); the causal frontier is
     aligned to the end of the key sequence, matching `ref.attention_ref`.
+
+    pad: optional (B,) int32 per-sequence left-pad counts (ragged batches
+    right-aligned to a common length): keys at positions < pad[b] are
+    invalid and masked for every query of sequence b; fully-padded query
+    rows produce zeros.  Matches `attention_ref(pad=...)`.
     """
     B, H, Sq, D = q.shape
     Sk = k.shape[2]
     scale = 1.0 / np.sqrt(D)
+    masked = pad is not None
+    padf = jnp.repeat(jnp.asarray(pad if masked else np.zeros((B,)),
+                                  jnp.int32), H)       # (B·H,)
     qf = q.reshape(B * H, Sq, D)
     kf = k.reshape(B * H, Sk, D)
     vf = v.reshape(B * H, Sk, D)
@@ -119,9 +136,10 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
     out = pl.pallas_call(
         functools.partial(_kernel, nk=nk, bq=bq, bk=bk, sq=Sqp, sk=Skp,
                           causal=causal, window=window, softcap=softcap,
-                          scale=scale),
+                          scale=scale, masked=masked),
         grid=(B * H, Sqp // bq, nk),
         in_specs=[
+            pl.BlockSpec((1,), lambda b, i, j: (b,)),
             pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
@@ -137,7 +155,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
             dimension_semantics=("parallel", "parallel",
                                  "arbitrary")) if not interpret else None,
         interpret=interpret,
-    )(qf, kf, vf)
+    )(padf, qf, kf, vf)
     # padded causal-frontier shift: queries were padded on the right, so real
     # rows used sk-sq offset computed with padded sizes; compensate by having
     # padded only when (Skp - Sqp) == (Sk - Sq), enforced here.

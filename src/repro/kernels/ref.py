@@ -102,11 +102,15 @@ def fold_ref(x, moduli: Sequence[int], bound: int):
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
-                  softcap: float | None = None, scale: float | None = None):
+                  softcap: float | None = None, scale: float | None = None,
+                  pad=None):
     """Oracle attention: (B, H, Sq, D), (B, H, Sk, D), (B, H, Sk, D).
 
     Causal + optional sliding window + optional logit softcap — the exact
     masking semantics the models use (gemma2/h2o-danube/hymba variants).
+    ``pad`` ((B,) int32, optional) marks the first pad[b] key positions of
+    sequence b invalid (the ragged left-padded batch mask); fully-masked
+    query rows produce zeros, matching the kernel.
     """
     sq, sk = q.shape[-2], k.shape[-2]
     scale = scale if scale is not None else 1.0 / np.sqrt(q.shape[-1])
@@ -120,6 +124,10 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
         mask &= kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
-    logits = jnp.where(mask, logits, -1e30)
-    p = jax.nn.softmax(logits, axis=-1)
+    mask = mask[None]                                        # (1, sq, sk)
+    if pad is not None:
+        mask = mask & (kpos[None] >= jnp.asarray(pad)[:, None, None])
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    alive = mask.any(axis=-1)[:, None, :, None]              # (B|1,1,sq,1)
+    p = jnp.where(alive, jax.nn.softmax(logits, axis=-1), 0.0)
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -109,9 +109,12 @@ NEG_INF = -1e30
 
 
 def _mask(qpos, kpos, window):
-    """Causal + sliding-window mask from absolute positions (int32)."""
-    m = kpos[None, :] <= qpos[:, None]
-    m &= kpos[None, :] > (qpos[:, None] - window)
+    """Causal + sliding-window mask from absolute positions (int32).
+
+    qpos: (Bm, Sq), kpos: (Bm, Sk) with Bm ∈ {1, B} → (Bm, Sq, Sk).
+    """
+    m = kpos[:, None, :] <= qpos[:, :, None]
+    m &= kpos[:, None, :] > (qpos[:, :, None] - window)
     return m
 
 
@@ -128,8 +131,10 @@ def attention(q, k, v, qpos, kpos, *, window: int | jnp.ndarray,
     """GQA attention over absolute positions.
 
     q: (B, Sq, Hq, D); k, v: (B, Sk, Hk, D) with Hq % Hk == 0.
-    qpos: (Sq,) int32 absolute positions of the queries;
-    kpos: (Sk,) int32 absolute positions of keys (−1 ⇒ invalid slot).
+    qpos: (Sq,) or (B, Sq) int32 absolute positions of the queries;
+    kpos: (Sk,) or (B, Sk) int32 absolute positions of keys (−1 ⇒ invalid
+    slot — left-pad slots and unwritten ring entries are encoded this way,
+    so ragged prompts batch without leaking across sequences).
     window: python int or scalar int32 array (scan-over-layers passes the
     per-layer window as data).
     """
@@ -140,29 +145,35 @@ def attention(q, k, v, qpos, kpos, *, window: int | jnp.ndarray,
     kk = jnp.repeat(k, groups, axis=2)
     vv = jnp.repeat(v, groups, axis=2)
 
-    valid_k = kpos >= kv_valid_from
+    # normalize positions to (Bm, S) with Bm ∈ {1, B}: the shared-positions
+    # path keeps a broadcast batch axis so no (B, Sq, Sk) mask materializes.
+    qpos = qpos[None] if qpos.ndim == 1 else qpos
+    kpos = kpos[None] if kpos.ndim == 1 else kpos
+    valid_k = kpos >= kv_valid_from                         # (Bm, Sk)
 
     if Sk <= 2 * block_kv or Sq == 1:
         s = _scores(q, kk, softcap, scale)
-        m = _mask(qpos, kpos, window) & valid_k[None, :]
-        s = jnp.where(m[None, None], s, NEG_INF)
+        m = _mask(qpos, kpos, window) & valid_k[:, None, :]
+        s = jnp.where(m[:, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), vv)
 
     # blocked online softmax over key blocks (jnp flash)
     nb = Sk // block_kv
     rem = Sk - nb * block_kv
+    Bm = kpos.shape[0]
     kb = kk[:, :nb * block_kv].reshape(B, nb, block_kv, Hq, D)
     vb = vv[:, :nb * block_kv].reshape(B, nb, block_kv, Hq, D)
-    pb = kpos[:nb * block_kv].reshape(nb, block_kv)
-    vld = valid_k[:nb * block_kv].reshape(nb, block_kv)
+    pb = kpos[:, :nb * block_kv].reshape(Bm, nb, block_kv).transpose(1, 0, 2)
+    vld = valid_k[:, :nb * block_kv].reshape(Bm, nb, block_kv) \
+        .transpose(1, 0, 2)
 
     def step(carry, xs):
         m_run, l_run, acc = carry
         kblk, vblk, kp, vl = xs
         s = _scores(q, kblk, softcap, scale)
-        msk = _mask(qpos, kp, window) & vl[None, :]
-        s = jnp.where(msk[None, None], s, NEG_INF)
+        msk = _mask(qpos, kp, window) & vl[:, None, :]
+        s = jnp.where(msk[:, None], s, NEG_INF)
         m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m_run - m_new)
@@ -180,8 +191,9 @@ def attention(q, k, v, qpos, kpos, *, window: int | jnp.ndarray,
         (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), pb, vld))
     if rem:
         s = _scores(q, kk[:, nb * block_kv:], softcap, scale)
-        msk = _mask(qpos, kpos[nb * block_kv:], window) & valid_k[None, nb * block_kv:]
-        s = jnp.where(msk[None, None], s, NEG_INF)
+        msk = _mask(qpos, kpos[:, nb * block_kv:], window) \
+            & valid_k[:, None, nb * block_kv:]
+        s = jnp.where(msk[:, None], s, NEG_INF)
         m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m_run - m_new)

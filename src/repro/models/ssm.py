@@ -77,8 +77,28 @@ def _gates(cfg, params, dt):
     return dt, dt * A                                  # (B,S,H) each
 
 
-def ssm_apply(params, x, cfg):
-    """Chunked SSD forward.  x: (B, S, d_model) → (B, S, d_model)."""
+def _mask_ssm_inputs(xBC, valid):
+    """Zero the (x, B, C) conv streams at invalid (left-pad) slots.
+
+    Pads form a prefix, so the causal conv sees the same zeros an unpadded
+    sequence's left zero-padding provides.  NOT sufficient alone: dt/dA must
+    also be zeroed AFTER `_gates` (softplus(0 + dt_bias) ≠ 0) so pad steps
+    become identity recurrence steps — both call sites do that; together the
+    two masks make batched ragged prompts bit-identical to unbatched runs.
+    """
+    if valid is None:
+        return xBC
+    return jnp.where(valid[..., None], xBC, jnp.zeros_like(xBC))
+
+
+def ssm_apply(params, x, cfg, valid=None):
+    """Chunked SSD forward.  x: (B, S, d_model) → (B, S, d_model).
+
+    ``valid`` ((B, S) bool, optional): validity mask for left-padded ragged
+    batches; invalid slots contribute nothing to the recurrence (their own
+    output rows are garbage and must be masked by the caller's use — the
+    serving engine never reads pad rows).
+    """
     B, S, _ = x.shape
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     Q = min(cfg.ssm_chunk, S)
@@ -87,11 +107,16 @@ def ssm_apply(params, x, cfg):
 
     proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
     z, xBC, dt = _split_proj(cfg, proj)
+    xBC = _mask_ssm_inputs(xBC, valid)
     xBC = _conv(xBC, params["conv_w"], params["conv_b"])
     xi = xBC[..., :cfg.d_inner].reshape(B, S, H, P)
     Bv = xBC[..., cfg.d_inner:cfg.d_inner + N]                  # (B,S,N)
     Cv = xBC[..., cfg.d_inner + N:]                             # (B,S,N)
     dt, dA = _gates(cfg, params, dt)                            # (B,S,H)
+    if valid is not None:
+        v32 = valid[..., None].astype(jnp.float32)              # (B,S,1)
+        dt = dt * v32
+        dA = dA * v32
 
     # chunk views, chunk axis leading for the scan
     xc = xi.reshape(B, nC, Q, H, P).transpose(1, 0, 2, 3, 4).astype(jnp.float32)

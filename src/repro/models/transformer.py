@@ -163,8 +163,15 @@ def _attn_full(p, h, cfg: ModelConfig, window, positions):
     return o, (k, v)
 
 
-def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache):
-    """One-token attention with cache update.  h: (B, 1, d)."""
+def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache, positions=None):
+    """One-token attention with cache update.  h: (B, 1, d).
+
+    ``pos`` is the scalar cache-slot index (padded coordinate: slot s holds
+    the token at padded index s); ``positions`` (optional, (B,)) are the
+    per-sequence *real* positions ``pos − pad[i]`` for ragged left-padded
+    batches — they drive RoPE and the attention mask, so a short prompt's
+    RoPE phases and window are not shifted by its batchmates' padding.
+    """
     B = h.shape[0]
     H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
@@ -174,7 +181,7 @@ def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache):
     if cfg.qk_norm:
         q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
-    qpos = pos[None]
+    qpos = pos[None] if positions is None else positions[:, None]
     if cfg.pos == "rope":
         cos, sin = rope(qpos, dh, cfg.rope_theta)
         q = apply_rope(q, cos, sin)
@@ -183,11 +190,20 @@ def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache):
         ck, cv, cp = update_cache_ring(cache["k"], cache["v"], cache["pos"],
                                        k, v, pos)
         new_cache = {"k": ck, "v": cv, "pos": cp}
-        kpos = cp
+        kpad = cp                          # (w,) padded indices, −1 unwritten
     else:                                  # full cache (global layer)
         ck, cv = update_cache_full(cache["k"], cache["v"], k, v, pos)
         new_cache = {"k": ck, "v": cv}
-        kpos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+        kpad = jnp.arange(ck.shape[1], dtype=jnp.int32)
+    if positions is None:
+        kpos = kpad
+    else:
+        # shift the slot-aligned padded indices into per-sequence real
+        # positions; pad slots (real position < 0) and unwritten ring slots
+        # (padded index −1) become −1 ⇒ invalid keys.
+        pad = pos - positions                                  # (B,)
+        kpos = kpad[None] - pad[:, None]
+        kpos = jnp.where((kpad[None] >= 0) & (kpos >= 0), kpos, -1)
     o = attention(q, ck.astype(q.dtype), cv.astype(q.dtype), qpos, kpos,
                   window=window, softcap=cfg.softcap_attn,
                   block_kv=cfg.attn_block_kv)
@@ -197,9 +213,9 @@ def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache):
     return o, new_cache
 
 
-def _ssm_full(p, h, cfg: ModelConfig):
+def _ssm_full(p, h, cfg: ModelConfig, valid=None):
     x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
-    o = ssm_apply(p["ssm"], x, cfg)
+    o = ssm_apply(p["ssm"], x, cfg, valid=valid)
     if cfg.post_norm:
         o = rms_norm(o, p["norm_mix_post"], cfg.norm_eps)
     return o
@@ -234,14 +250,15 @@ def _layer_full(p, h, cfg: ModelConfig, layer_in_block: int, window,
                 positions):
     kind = _mixer_kind(cfg)
     aux = jnp.float32(0.0)
+    valid = _valid_of(positions)
     if kind == "attn":
         o, _ = _attn_full(p, h, cfg, window, positions)
         h = h + o
     elif kind == "ssm":
-        h = h + _ssm_full(p, h, cfg)
+        h = h + _ssm_full(p, h, cfg, valid)
     else:  # hybrid: parallel attention + ssm on the same normed input
         oa, _ = _attn_full(p, h, cfg, window, positions)
-        os_ = _ssm_full(p, h, cfg)
+        os_ = _ssm_full(p, h, cfg, valid)
         oa = rms_norm(oa, p["norm_attn_out"], cfg.norm_eps)
         os_ = rms_norm(os_, p["norm_ssm_out"], cfg.norm_eps)
         h = h + 0.5 * (oa + os_)
@@ -292,6 +309,14 @@ def _stack_apply(cfg: ModelConfig, params, h, windows, positions,
 
 # ------------------------------------------------------------------ forward -
 def _embed(cfg: ModelConfig, params, batch):
+    """Token/embedding frontend + positions.
+
+    ``batch["pad"]`` (optional, (B,) int32 left-pad counts) makes positions
+    per-sequence: ``positions[i] = arange(S) − pad[i]`` — negative at padded
+    slots, which downstream attention treats as invalid keys (DESIGN.md §11).
+    Without it positions stay the shared (S,) arange (training path,
+    bit-identical to before).
+    """
     if cfg.frontend == "embeddings":
         h = batch["embeds"].astype(dtype_of(cfg))
         B, S = h.shape[0], h.shape[1]
@@ -300,9 +325,18 @@ def _embed(cfg: ModelConfig, params, batch):
         B, S = tokens.shape
         h = jnp.take(params["embed"], tokens, axis=0)
     positions = jnp.arange(S, dtype=jnp.int32)
+    pad = batch.get("pad")
+    if pad is not None:
+        positions = positions[None] - pad[:, None].astype(jnp.int32)
     if cfg.pos == "sinusoidal":
-        h = h + sinusoidal(positions, cfg.d_model)[None].astype(h.dtype)
+        pe = sinusoidal(positions, cfg.d_model)
+        h = h + (pe[None] if positions.ndim == 1 else pe).astype(h.dtype)
     return h, positions
+
+
+def _valid_of(positions):
+    """(B, S) bool validity mask from per-sequence positions, or None."""
+    return (positions >= 0) if positions.ndim == 2 else None
 
 
 def _lm_head(cfg: ModelConfig, params, h):
@@ -374,11 +408,12 @@ def _cache_is_stacked(cache_col) -> bool:
 
 
 # -------------------------------------------------------------- decode step -
-def _layer_decode(p, h, cfg: ModelConfig, block_layer, window, pos, cache):
+def _layer_decode(p, h, cfg: ModelConfig, block_layer, window, pos, cache,
+                  positions=None):
     kind = _mixer_kind(cfg)
     new_cache = {}
     if kind == "attn":
-        o, nc = _attn_decode(p, h, cfg, window, pos, cache)
+        o, nc = _attn_decode(p, h, cfg, window, pos, cache, positions)
         new_cache.update(nc)
         h = h + o
     elif kind == "ssm":
@@ -390,7 +425,8 @@ def _layer_decode(p, h, cfg: ModelConfig, block_layer, window, pos, cache):
         h = h + o
     else:
         oa, nc = _attn_decode(p, h, cfg, window, pos,
-                              {k: v for k, v in cache.items() if k != "ssm"})
+                              {k: v for k, v in cache.items() if k != "ssm"},
+                              positions)
         x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
         os_, ns = ssm_decode_step(p["ssm"], x, cache["ssm"], cfg)
         new_cache.update(nc)
@@ -406,9 +442,12 @@ def _layer_decode(p, h, cfg: ModelConfig, block_layer, window, pos, cache):
     return h, new_cache
 
 
-def decode_step(cfg: ModelConfig, params, cache, batch, pos):
+def decode_step(cfg: ModelConfig, params, cache, batch, pos, positions=None):
     """One decode step.  batch: {"tokens": (B, 1)} (or embeds); pos scalar.
 
+    ``pos`` is the shared cache-slot index (the padded coordinate);
+    ``positions`` (optional, (B,) int32) are per-sequence real positions for
+    ragged left-padded batches (``pos − pad[i]``) — see `_attn_decode`.
     Returns (logits (B, vocab) f32, new_cache).
     """
     if cfg.frontend == "embeddings":
@@ -416,7 +455,9 @@ def decode_step(cfg: ModelConfig, params, cache, batch, pos):
     else:
         h = jnp.take(params["embed"], batch["tokens"], axis=0)
     if cfg.pos == "sinusoidal":
-        h = h + sinusoidal(pos[None], cfg.d_model)[None].astype(h.dtype)
+        pe = (sinusoidal(pos[None], cfg.d_model)[None] if positions is None
+              else sinusoidal(positions[:, None], cfg.d_model))
+        h = h + pe.astype(h.dtype)
 
     windows = jnp.asarray(window_array(cfg, FULL_WINDOW))
     all_stacked = all(_cache_is_stacked(cache[f"sub{i}"])
@@ -428,7 +469,7 @@ def decode_step(cfg: ModelConfig, params, cache, batch, pos):
             new_rows = {}
             for i in range(cfg.layers_per_block):
                 hh, nc = _layer_decode(blk[f"sub{i}"], hh, cfg, i, wrow[i],
-                                       pos, crow[f"sub{i}"])
+                                       pos, crow[f"sub{i}"], positions)
                 new_rows[f"sub{i}"] = nc
             return hh, new_rows
 
@@ -447,7 +488,7 @@ def decode_step(cfg: ModelConfig, params, cache, batch, pos):
                 c = col["per_block"][b] if not _cache_is_stacked(col) \
                     else jax.tree.map(lambda x: x[b], col)
                 h, nc = _layer_decode(blk[f"sub{i}"], h, cfg, i,
-                                      windows[b, i], pos, c)
+                                      windows[b, i], pos, c, positions)
                 new_caches[f"sub{i}"]["per_block"].append(nc)
         for i in range(cfg.layers_per_block):
             col = cache[f"sub{i}"]
@@ -462,8 +503,16 @@ def decode_step(cfg: ModelConfig, params, cache, batch, pos):
 
 # ----------------------------------------------------------------- prefill --
 def prefill(cfg: ModelConfig, params, batch, smax: int):
-    """Forward + cache build.  Returns (last-token logits, cache, pos)."""
+    """Forward + cache build.  Returns (last-token logits, cache, pos).
+
+    With ``batch["pad"]`` ((B,) left-pad counts) the prefill is mask-correct
+    for ragged prompts: per-sequence positions ``arange(S) − pad[i]`` drive
+    RoPE and the attention mask (pad slots are invalid keys), and SSM layers
+    zero padded inputs so state/conv caches carry no pad contribution.
+    Prompts are right-aligned, so the last-token logits are always real.
+    """
     h, positions = _embed(cfg, params, batch)
+    valid = _valid_of(positions)
     B, S = h.shape[0], h.shape[1]
     dtype = dtype_of(cfg)
     windows = jnp.asarray(window_array(cfg, S))
@@ -486,7 +535,7 @@ def prefill(cfg: ModelConfig, params, batch, smax: int):
                 oa, (k, v) = _attn_full(p, h, cfg, windows[b, i], positions)
             if kind in ("ssm", "hybrid"):
                 x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
-                os_, ssm_c = _ssm_prefill(p["ssm"], x, cfg)
+                os_, ssm_c = _ssm_prefill(p["ssm"], x, cfg, valid)
                 if cfg.post_norm:
                     os_ = rms_norm(os_, p["norm_mix_post"], cfg.norm_eps)
             if kind == "attn":
@@ -539,20 +588,30 @@ def prefill(cfg: ModelConfig, params, batch, smax: int):
     return logits, cache, jnp.int32(S)
 
 
-def _ssm_prefill(ssm_params, x, cfg):
-    """SSD forward that also returns the decode cache (state + conv tail)."""
-    from .ssm import _conv, _gates, _split_proj  # reuse internals
+def _ssm_prefill(ssm_params, x, cfg, valid=None):
+    """SSD forward that also returns the decode cache (state + conv tail).
+
+    ``valid`` ((B, S) bool) zeroes padded inputs exactly like `ssm_apply`:
+    pad slots contribute nothing to the running state or the conv tail, so
+    decode continues from the same cache a pad-free prefill would build.
+    """
+    from .ssm import _conv, _gates, _mask_ssm_inputs, _split_proj
     B, S, _ = x.shape
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     proj = jnp.einsum("bsd,de->bse", x, ssm_params["in_proj"])
     z, xBC_raw, dt = _split_proj(cfg, proj)
+    xBC_raw = _mask_ssm_inputs(xBC_raw, valid)
     conv_tail = xBC_raw[:, S - (cfg.ssm_conv - 1):, :]
-    y = ssm_apply(ssm_params, x, cfg)
+    y = ssm_apply(ssm_params, x, cfg, valid=valid)
     # final state: rerun the recurrence cheaply at chunk granularity
     xBC = _conv(xBC_raw, ssm_params["conv_w"], ssm_params["conv_b"])
     xi = xBC[..., :cfg.d_inner].reshape(B, S, H, P).astype(jnp.float32)
     Bv = xBC[..., cfg.d_inner:cfg.d_inner + N].astype(jnp.float32)
     dt_, dA = _gates(cfg, ssm_params, dt)
+    if valid is not None:
+        v32 = valid[..., None].astype(jnp.float32)         # (B, S, 1)
+        dt_ = dt_ * v32
+        dA = dA * v32
     cum = jnp.cumsum(dA, axis=1)
     tail = jnp.exp(cum[:, -1:, :] - cum)
     state = jnp.einsum("bth,btn,bthp->bhnp", tail * dt_, Bv, xi)

@@ -1,12 +1,24 @@
-"""Batched serving engine: prefill + decode with jit'd steps.
+"""Batched serving engine: mask-correct prefill + on-device scan decode.
 
-Continuous-batching-lite: requests are left-padded to a common prefill
-length; a per-sequence validity mask tracks real tokens so ragged prompts
-batch correctly; decode proceeds in lockstep with per-sequence stop
-tracking.  The decode step is exactly the function the dry-run lowers for
-decode_32k/long_500k cells (one new token against a smax-sized cache).
+Continuous-batching-lite: requests are left-padded (right-aligned) to a
+common prefill length and a per-sequence validity mask — threaded through
+`models.transformer.prefill` as ``batch["pad"]`` — guarantees ragged prompts
+batch correctly: pad slots are invalid attention keys, per-sequence RoPE
+positions are ``arange(S) − pad[i]``, and SSM layers zero padded inputs, so
+greedy outputs are *batch-invariant* (bit-identical whether a prompt is
+served alone or alongside longer batchmates; `tests/test_serve.py`).
 
-Sampling: greedy or temperature; deterministic under a fixed key.
+Decode runs as ONE jitted `lax.scan` over the new-token axis: sampling, the
+per-sequence EOS/done mask, and the KV/SSM cache updates all live on device,
+and the sampled tokens are materialized to the host once at the end — zero
+per-token host round-trips (DESIGN.md §11).  The per-token Python loop
+survives as ``engine="host"`` for A/B measurement (`benchmarks/
+decode_bench.py`) and equivalence testing; both paths share prefill /
+`decode_step`, so they emit identical greedy tokens.
+
+Sampling: greedy or temperature; deterministic under a fixed seed (the root
+key is split once before first use, then chain-split per step — the same
+chain in both engines).
 """
 from __future__ import annotations
 
@@ -23,6 +35,13 @@ from repro.models import transformer as T
 __all__ = ["Engine"]
 
 
+def _sample(logits, temperature: float, key):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, smax: int = 2048):
         self.cfg = cfg
@@ -32,47 +51,141 @@ class Engine:
             functools.partial(T.decode_step, cfg))
         self._prefill = jax.jit(
             functools.partial(T.prefill, cfg), static_argnames=("smax",))
+        self._scan_fns: Dict[Any, Any] = {}
 
-    def generate(self, prompts: List[List[int]], max_new_tokens: int = 32,
-                 temperature: float = 0.0, seed: int = 0,
-                 eos_id: Optional[int] = None) -> List[List[int]]:
-        """Batched generation.  prompts: ragged token lists."""
-        cfg = self.cfg
+    # ------------------------------------------------------------- batching -
+    def _pack(self, prompts: List[List[int]]):
+        """Right-align (left-pad) ragged prompts to a common length.
+
+        SSM/hybrid stacks additionally need the prefill length to be a
+        multiple of ``ssm_chunk`` (the chunked dual form's requirement) —
+        round up with extra pad; pad slots are provably inert.
+        """
         B = len(prompts)
         plen = max(len(p) for p in prompts)
-        # right-align (left-pad) so every prompt's last token sits at plen-1
+        if self.cfg.ssm or self.cfg.hybrid:
+            q = self.cfg.ssm_chunk
+            plen = -(-plen // q) * q
         toks = np.zeros((B, plen), np.int32)
+        pad = np.zeros((B,), np.int32)
         for i, p in enumerate(prompts):
             toks[i, plen - len(p):] = p
-        batch = {"tokens": jnp.asarray(toks)}
+            pad[i] = plen - len(p)
+        return {"tokens": jnp.asarray(toks), "pad": jnp.asarray(pad)}, plen
 
-        logits, cache, pos = self._prefill(self.params, batch, smax=self.smax)
-        key = jax.random.PRNGKey(seed)
+    # ------------------------------------------------------------- generate -
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 eos_id: Optional[int] = None,
+                 engine: str = "scan") -> List[List[int]]:
+        """Batched generation.  prompts: ragged token lists.
+
+        ``engine="scan"`` (default) runs the fully on-device decode;
+        ``"host"`` runs the per-token Python loop (same math, per-token
+        dispatch + host syncs — the measured baseline).
+        """
+        if engine not in ("scan", "host"):
+            raise ValueError(f"engine must be 'scan' or 'host', got {engine!r}")
+        batch, plen = self._pack(prompts)
+        if engine == "host":
+            return self._generate_host(prompts, batch, plen, max_new_tokens,
+                                       temperature, seed, eos_id)
+        # prefill through the same jitted executable as the host path (one
+        # compile per batch shape, shared); only the decode scan is keyed on
+        # the (max_new_tokens, temperature, eos_id) triple.
+        logits, cache, pos0 = self._prefill(self.params, batch,
+                                            smax=self.smax)
+        run = self._scan_fn(max_new_tokens, temperature, eos_id)
+        first, done0, toks, emit = run(self.params, logits, cache,
+                                       batch["pad"], pos0, jnp.int32(seed))
+        first = np.asarray(first)
+        toks = np.asarray(toks)                       # (T-1, B)
+        emit = np.asarray(emit)                       # (T-1, B) bool
+        out = [list(p) for p in prompts]
+        for i in range(len(prompts)):
+            out[i].append(int(first[i]))
+            for t in range(toks.shape[0]):
+                if emit[t, i]:
+                    out[i].append(int(toks[t, i]))
+        return out
+
+    # ------------------------------------------------------------ scan path -
+    def _scan_fn(self, max_new_tokens: int, temperature: float,
+                 eos_id: Optional[int]):
+        key_ = (max_new_tokens, temperature, eos_id)
+        if key_ in self._scan_fns:
+            return self._scan_fns[key_]
+        cfg = self.cfg
+        eos = -1 if eos_id is None else int(eos_id)   # -1 never matches
+
+        def run(params, logits, cache, pad, pos0, seed):
+            key, k0 = jax.random.split(jax.random.PRNGKey(seed))
+            first = _sample(logits, temperature, k0)
+            done0 = first == eos
+            if max_new_tokens <= 1:
+                zero = jnp.zeros((0, pad.shape[0]), jnp.int32)
+                return first, done0, zero, zero.astype(bool)
+
+            def chain(k, _):
+                k, sub = jax.random.split(k)
+                return k, sub
+
+            _, subkeys = jax.lax.scan(chain, key, None,
+                                      length=max_new_tokens - 1)
+
+            def step(carry, xs):
+                cur, done, cache, t = carry
+                kt = xs
+                logits, cache = T.decode_step(
+                    cfg, params, cache, {"tokens": cur[:, None]}, t,
+                    positions=t - pad)
+                nxt = _sample(logits, temperature, kt)
+                new_done = done | (nxt == eos)
+                # emit == "was not done at entry": EOS itself is emitted,
+                # everything after it is dropped host-side.
+                return (nxt, new_done, cache, t + 1), (nxt, ~done)
+
+            (_, _, _, _), (toks, emit) = jax.lax.scan(
+                step, (first, done0, cache, pos0), subkeys)
+            return first, done0, toks, emit
+
+        fn = jax.jit(run)
+        self._scan_fns[key_] = fn
+        return fn
+
+    # ------------------------------------------------------------ host path -
+    def _generate_host(self, prompts, batch, plen, max_new_tokens,
+                       temperature, seed, eos_id):
+        """Per-token Python loop (the pre-scan engine, kept as the measured
+        baseline): one jitted decode_step dispatch + `int()` host syncs per
+        token.  Mask-correct — it shares prefill/decode_step with the scan
+        path — and emits the identical token stream."""
+        B = len(prompts)
+        pad = batch["pad"]
+        logits, cache, _ = self._prefill(self.params, batch, smax=self.smax)
+        key, k0 = jax.random.split(jax.random.PRNGKey(seed))
+        cur = _sample(logits, temperature, k0)
         out = [list(p) for p in prompts]
         done = np.zeros(B, bool)
-        cur = self._sample(logits, temperature, key)
         for i in range(B):
-            out[i].append(int(cur[i]))
+            tok = int(cur[i])
+            out[i].append(tok)
+            if eos_id is not None and tok == eos_id:
+                done[i] = True
 
         for t in range(1, max_new_tokens):
-            step_batch = {"tokens": cur[:, None]}
-            logits, cache = self._decode(self.params, cache, step_batch,
-                                         jnp.int32(plen + t - 1))
+            if done.all():
+                break
+            pos = jnp.int32(plen + t - 1)
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": cur[:, None]}, pos,
+                                         positions=pos - pad)
             key, sub = jax.random.split(key)
-            cur = self._sample(logits, temperature, sub)
+            cur = _sample(logits, temperature, sub)
             for i in range(B):
                 if not done[i]:
                     tok = int(cur[i])
                     out[i].append(tok)
                     if eos_id is not None and tok == eos_id:
                         done[i] = True
-            if done.all():
-                break
         return out
-
-    @staticmethod
-    def _sample(logits, temperature: float, key):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / temperature,
-                                      axis=-1).astype(jnp.int32)

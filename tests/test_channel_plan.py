@@ -49,7 +49,8 @@ def test_plan_overflow_validation():
 
 def test_plan_signed_metadata_and_dtype():
     signed = ChannelPlan.for_matmul(PAPER, 64, signed=True)
-    assert signed.signed and signed.bound == 64 * 127 * (max(PAPER) - 1)
+    # 128, not 127: the user-facing operand bound must cover int8's −128
+    assert signed.signed and signed.bound == 64 * 128 * (max(PAPER) - 1)
     assert signed.residue_dtype == jnp.int8            # residues < 128
     wide = ChannelPlan.for_product(N11_CHANNELS)
     assert wide.residue_dtype == jnp.int32             # residues up to 3070

@@ -105,6 +105,34 @@ def test_flash_attention_sweep(B, H, Sq, Sk, D, win, cap, dtype):
                                np.asarray(want, np.float32), atol=tol)
 
 
+@pytest.mark.parametrize("B,H,Sq,Sk,D,win,cap", [
+    (3, 2, 64, 64, 32, None, None),
+    (2, 2, 64, 64, 32, 16, 30.0),
+    (2, 1, 1, 96, 32, None, None),                   # decode shape
+])
+def test_flash_attention_pad_mask(B, H, Sq, Sk, D, win, cap):
+    """Ragged-batch validity: the kernel's pad path == the padded oracle,
+    and each sequence's valid rows == its unpadded solo run (no pad leak)."""
+    rng = np.random.default_rng(7 * B + Sk)
+    q = jnp.asarray(rng.standard_normal((B, H, Sq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, Sk, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, Sk, D)), jnp.float32)
+    pad = jnp.asarray(rng.integers(0, Sk - 1, B), jnp.int32)
+    got = flash_attention(q, k, v, causal=True, window=win, softcap=cap,
+                          pad=pad, block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, causal=True, window=win, softcap=cap,
+                             pad=pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    if Sq == Sk:
+        for b in range(B):
+            p = int(pad[b])
+            solo = flash_attention(q[b:b + 1, :, p:], k[b:b + 1, :, p:],
+                                   v[b:b + 1, :, p:], causal=True, window=win,
+                                   softcap=cap, block_q=32, block_k=32)
+            np.testing.assert_allclose(np.asarray(got[b, :, p:]),
+                                       np.asarray(solo[0]), atol=2e-5)
+
+
 def test_channel_schedules_shared():
     """Kernel and oracle provably share the same fold ladders."""
     sched, mods, n_sub = ref.channel_schedules(MODULI, 1024 * 46 * 46)

@@ -75,6 +75,27 @@ def test_quantize_bounds():
     assert float(jnp.max(err)) <= float(jnp.max(s)) * 0.5 + 1e-6
 
 
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("broadcast", [True, False])
+def test_exactness_int8_min_value(backend, broadcast):
+    """−128 regression: int8 is asymmetric and `rns_int_matmul` promises
+    exactness for ANY int8 input — the signed operand bound must be
+    K·128·(m−1), not K·127·(m−1), or the fold ladder under-folds.
+    Worst case: operands saturated at −128 so every accumulator hits the
+    true maximum K·128·128."""
+    M, K, N = 4, 96, 8
+    rng = np.random.default_rng(42)
+    xq = rng.integers(-128, 128, (M, K)).astype(np.int8)
+    wq = rng.integers(-128, 128, (K, N)).astype(np.int8)
+    xq[0, :] = -128                      # a fully saturated activation row
+    wq[:, 0] = -128                      # … meeting a fully saturated column
+    got = np.asarray(rns_int_matmul(jnp.asarray(xq), jnp.asarray(wq),
+                                    broadcast=broadcast, backend=backend))
+    want = xq.astype(np.int64) @ wq.astype(np.int64)
+    assert int(want[0, 0]) == K * 128 * 128      # the worst-case accumulator
+    assert np.array_equal(got.astype(np.int64), want)
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(8, 2048), st.integers(1, 6), st.integers(1, 6))
 def test_exactness_property(K, M, N):
