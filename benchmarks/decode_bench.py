@@ -40,6 +40,13 @@ CONFIGS = [
 ]
 SMOKE_CONFIGS = [("smollm-135m", 2, (3, 9), 32)]
 
+# rns_int8 decode: live per-step weight quantization+conversion vs weights
+# encoded to residue-domain RNSTensors once at Engine.__init__ (the
+# encode_weights LinearSpec flag, DESIGN.md §12).  Greedy outputs must be
+# bit-identical; the gap is the per-call Stage-②-for-weights cost.
+ENCODED_CONFIGS = [("rns-smollm-135m", 2, (3, 9), 32)]
+SMOKE_ENCODED_CONFIGS = [("rns-smollm-135m", 2, (3, 9), 16)]
+
 
 def _prompts(cfg, lens, seed=0):
     rng = np.random.default_rng(seed)
@@ -58,6 +65,7 @@ def _time_generate(eng, prompts, T_new, engine, reps=3):
 
 
 def run(configs=None, smoke: bool = False):
+    default_set = configs is None
     configs = configs or (SMOKE_CONFIGS if smoke else CONFIGS)
     rows = []
     for arch, B, lens, T_new in configs:
@@ -84,6 +92,50 @@ def run(configs=None, smoke: bool = False):
                 f"{tps_host:.1f} tok/s) — per-token sync regression?")
     if smoke:
         print("# smoke OK: scan engine faster, host/scan greedy-identical")
+    if default_set:
+        # default benchmark set ⇒ include the encoded-weights rns section;
+        # explicit caller-chosen configs stay exactly what was asked for.
+        rows += run_encoded(smoke=smoke)
+    return rows
+
+
+def run_encoded(configs=None, smoke: bool = False):
+    """Live-quantization vs encode-once rns decode (scan engine both)."""
+    import dataclasses
+
+    configs = configs or (SMOKE_ENCODED_CONFIGS if smoke else ENCODED_CONFIGS)
+    rows = []
+    for arch, B, lens, T_new in configs:
+        cfg_live = get_smoke_config(arch)
+        cfg_enc = dataclasses.replace(cfg_live, encode_weights=True)
+        params = T.make_params(cfg_live, jax.random.PRNGKey(0))
+        smax = max(lens) + T_new + 16
+        eng_live = Engine(cfg_live, params, smax=smax)
+        eng_enc = Engine(cfg_enc, params, smax=smax)
+        prompts = _prompts(cfg_live, lens)
+
+        tps_live, out_live = _time_generate(eng_live, prompts, T_new, "scan")
+        tps_enc, out_enc = _time_generate(eng_enc, prompts, T_new, "scan")
+        equal = out_live == out_enc
+        speedup = tps_enc / tps_live
+        tag = f"{arch}_B{B}_T{T_new}"
+        print(f"# {tag}: live={tps_live:.1f} tok/s encoded={tps_enc:.1f} "
+              f"tok/s speedup={speedup:.2f}x greedy_equal={equal} "
+              f"(per-step weight quant+conversion share of decode)")
+        rows.append((f"decode_rns_live_{tag}", tps_live, ""))
+        rows.append((f"decode_rns_encoded_{tag}", tps_enc,
+                     f"speedup={speedup:.2f}x,equal={equal}"))
+        if smoke:
+            assert equal, (
+                f"{tag}: encoded-weights greedy output diverged from the "
+                "live-quantization path")
+            # "not slower": best-of-reps with a 2% timing-noise floor — the
+            # encoded path strictly removes per-step work.
+            assert tps_enc >= 0.98 * tps_live, (
+                f"{tag}: encoded decode slower ({tps_enc:.1f} vs "
+                f"{tps_live:.1f} tok/s) — encode-once regression?")
+    if smoke:
+        print("# smoke OK: encoded-weights decode bit-identical & not slower")
     return rows
 
 

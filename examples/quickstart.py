@@ -60,3 +60,28 @@ y_jnp = rns_int_matmul(xq, wq, backend="jnp")
 y_pal = rns_int_matmul(xq, wq, backend="pallas")
 print("jnp and Pallas backends bit-identical:",
       bool((np.asarray(y_jnp) == np.asarray(y_pal)).all()))
+
+# --- 6. the residue-domain public API: RNSTensor + LinearSpec ----------------
+# Weights should LIVE in the residue channels (DESIGN.md §12): rns.encode(w)
+# quantizes + forward-converts once, and rns_dense consumes the residues
+# directly — zero weight quantization/conversion per call, outputs
+# bit-identical to the live-quantization path under jit.
+import jax
+from repro.core import LinearSpec, encode, rns_dense
+
+x32 = jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))
+w32 = jnp.asarray(rng.standard_normal((256, 8)).astype(np.float32))
+w_enc = encode(w32)                       # RNSTensor: (C, K, N) residues
+print(f"encoded weight: channels={w_enc.moduli}, residues "
+      f"{w_enc.residues.shape} {w_enc.residues.dtype}, bound={w_enc.bound}")
+y_live = jax.jit(rns_dense)(x32, w32)                 # Stage ② every call
+y_once = jax.jit(rns_dense)(x32, w_enc)               # Stage ② already done
+print("encode-once bit-identical to live quantization:",
+      np.asarray(y_live).tobytes() == np.asarray(y_once).tobytes())
+
+# The structured linear spec replaces the "rns_int8:pallas" string grammar
+# (which still parses, as a deprecation shim):
+spec = LinearSpec.parse("rns_int8:jnp")
+print("parsed legacy string:", spec,
+      "| encoded serving spec:", LinearSpec(mode="rns_int8",
+                                            encode_weights=True))

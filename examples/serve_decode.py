@@ -1,15 +1,21 @@
 """Batched serving with the decode engine (mask-correct ragged prompts,
-on-device scan decode — DESIGN.md §11).
+on-device scan decode — DESIGN.md §11) — including the encode-once RNS
+serving cell (DESIGN.md §12): weights quantized + forward-converted to
+residue-domain RNSTensors ONCE at Engine.__init__, so the decode scan does
+zero weight conversions per token yet emits bit-identical greedy tokens.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
+import dataclasses
+
 import jax
 
 from repro.configs.base import get_smoke_config
 from repro.models import transformer as T
-from repro.serve.engine import Engine
+from repro.serve import Engine
 
-cfg = get_smoke_config("h2o-danube-1.8b")        # SWA arch: ring caches
+# --- 1. SWA arch with ring caches ------------------------------------------
+cfg = get_smoke_config("h2o-danube-1.8b")
 params = T.make_params(cfg, jax.random.PRNGKey(0))
 eng = Engine(cfg, params, smax=128)
 
@@ -20,3 +26,18 @@ for p, o in zip(prompts, outs):
 print("served", sum(len(o) - len(p) for p, o in zip(prompts, outs)),
       "tokens with ring-buffer SWA caches (one device sync, zero per-token"
       " host round-trips)")
+
+# --- 2. the paper's RNS datapath, weights encoded to residues once ----------
+cfg_rns = get_smoke_config("rns-smollm-135m")           # live quantization
+cfg_enc = dataclasses.replace(cfg_rns, encode_weights=True)
+print("\nrns serving spec:", cfg_enc.linear_spec)
+params = T.make_params(cfg_rns, jax.random.PRNGKey(0))
+eng_live = Engine(cfg_rns, params, smax=64)
+eng_enc = Engine(cfg_enc, params, smax=64)              # encodes at init
+out_live = eng_live.generate(prompts, max_new_tokens=12)
+out_enc = eng_enc.generate(prompts, max_new_tokens=12)
+print("encode-once greedy tokens identical to live quantization:",
+      out_live == out_enc)
+wq = eng_enc.params["blocks"]["sub0"]["attn"]["wq"]
+print(f"weights live in residue form: {type(wq).__name__} "
+      f"residues {wq.residues.shape} over channels {wq.moduli}")

@@ -72,8 +72,15 @@ class ModelConfig:
 
     # --- framework ---------------------------------------------------------------
     # bf16 | rns_int8[:auto|jnp|pallas] — the paper's residue path, with an
-    # optional Stage-④ engine suffix (core/channel_plan backend dispatch).
+    # optional Stage-④ engine suffix.  This legacy string is resolved ONCE
+    # into the structured `linear_spec` (core/linear_spec.LinearSpec,
+    # DESIGN.md §12) that the model stack consumes.
     linear_backend: str = "bf16"
+    # Encode the static weight pytree to residue-domain RNSTensors at load
+    # time (serve.Engine / rns_tensor.encode_params): the decode hot path
+    # then performs zero weight quantizations / forward conversions per
+    # step.  Only meaningful with an rns_int8 linear_backend.
+    encode_weights: bool = False
     param_dtype: str = "bfloat16"
     remat: bool = True
     remat_policy: str = "full"   # full | save_ar (keep TP-AR outputs) | none
@@ -93,6 +100,19 @@ class ModelConfig:
     skip_shapes: Tuple[str, ...] = ()
 
     # ------------------------------------------------------------------ derived
+    @property
+    def linear_spec(self):
+        """The structured linear-datapath spec (resolved once per distinct
+        backend string — `LinearSpec.parse` is lru-cached — plus this
+        config's encode-weights flag)."""
+        from repro.core.linear_spec import LinearSpec
+        import dataclasses as _dc
+
+        spec = LinearSpec.parse(self.linear_backend)
+        if self.encode_weights:
+            spec = _dc.replace(spec, encode_weights=True)
+        return spec
+
     @property
     def d_inner(self) -> int:
         return self.ssm_expand * self.d_model

@@ -36,5 +36,24 @@ def smoke_pallas() -> ModelConfig:
                                linear_backend="rns_int8:pallas")
 
 
+def full_encoded() -> ModelConfig:
+    """Serving cell with encode-once weights (DESIGN.md §12): `serve.Engine`
+    converts the linear weights to residue-domain RNSTensors at load time,
+    so the decode scan performs zero weight quantizations / forward
+    conversions per token — the hot path consumes residues directly."""
+    return dataclasses.replace(smollm_135m.full(),
+                               name="rns-smollm-135m-encoded",
+                               linear_backend="rns_int8",
+                               encode_weights=True)
+
+
+def smoke_encoded() -> ModelConfig:
+    return dataclasses.replace(smollm_135m.smoke(),
+                               name="rns-smollm-smoke-encoded",
+                               linear_backend="rns_int8",
+                               encode_weights=True)
+
+
 register("rns-smollm-135m", full, smoke)
 register("rns-smollm-135m-pallas", full_pallas, smoke_pallas)
+register("rns-smollm-135m-encoded", full_encoded, smoke_encoded)

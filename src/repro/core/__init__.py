@@ -1,3 +1,49 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Public API of the RNS core (DESIGN.md §12).
+
+The residue-domain value type and the structured linear API live here:
+
+  * :class:`RNSTensor` + :func:`encode` / :func:`encode_params` — values held
+    in the paper's 2^n±δ residue channels; weights encoded ONCE at load time.
+  * :class:`LinearSpec` — the structured, hashable linear-datapath spec that
+    replaced the ``"rns_int8:pallas"`` string grammar (which still parses via
+    :meth:`LinearSpec.parse`, the deprecation shim).
+  * :func:`rns_dense` / :func:`rns_int_matmul` — the RNS linear layer.
+  * :class:`RNSBasis` and the paper's channel sets; the Stage-④/conversion
+    plans (:class:`ChannelPlan`, :class:`ConversionPlan`).
+
+This surface is locked by `tests/test_api_surface.py` — extending it is fine
+(update the snapshot), silently breaking it is not.
+"""
+from .channel_plan import ChannelPlan  # noqa: F401
+from .conversion_plan import ConversionPlan  # noqa: F401
+from .linear_spec import LinearSpec  # noqa: F401
+from .quant import QMAX, dequantize, quantize_int8  # noqa: F401
+from .rns import (  # noqa: F401
+    RNSBasis,
+    basis_for_accumulation,
+    basis_for_int8_matmul,
+    paper_n5_basis,
+    tau_basis,
+)
+from .rns_linear import reconstruct_mrc, rns_dense, rns_int_matmul  # noqa: F401
+from .rns_tensor import RNSTensor, encode, encode_params  # noqa: F401
+
+__all__ = [
+    "ChannelPlan",
+    "ConversionPlan",
+    "LinearSpec",
+    "QMAX",
+    "RNSBasis",
+    "RNSTensor",
+    "basis_for_accumulation",
+    "basis_for_int8_matmul",
+    "dequantize",
+    "encode",
+    "encode_params",
+    "paper_n5_basis",
+    "quantize_int8",
+    "reconstruct_mrc",
+    "rns_dense",
+    "rns_int_matmul",
+    "tau_basis",
+]

@@ -294,12 +294,17 @@ def matmul(a_res, b_res, moduli, *, backend: str = "auto",
 
 
 def matmul_broadcast(x, w, moduli, *, backend: str = "auto",
-                     interpret: Optional[bool] = None, **block_kw):
+                     interpret: Optional[bool] = None, encoded: bool = False,
+                     **block_kw):
     """Broadcast-operand modular matmul: (M,K) raw signed int8 × (K,N) int8
     weights → (C,M,N) canonical residues.
 
     Σ_k x_k·w_k ≡ Σ_k x_k·|w_k|_m (mod m): the activation operand never needs
-    forward conversion — only the (often static) weights do.  The jnp backend
+    forward conversion — only the (often static) weights do.  With
+    ``encoded=True`` not even those: ``w`` is then the pre-converted
+    ``(C, K, N)`` canonical residue stack (an :class:`~repro.core.rns_tensor.
+    RNSTensor`'s ``residues``) and this call performs ZERO forward
+    conversions — the encode-once hot path (DESIGN.md §12).  The jnp backend
     fuses all C channels into ONE int8 MXU matmul (M,K)×(K,C·N); the Pallas
     backend streams a single (1,M,K) activation block shared by every channel
     of the grid (`signed_a` epilogue).  Accumulators can be negative, so the
@@ -312,14 +317,21 @@ def matmul_broadcast(x, w, moduli, *, backend: str = "auto",
     from .conversion_plan import forward as forward_convert
 
     moduli = tuple(int(m) for m in moduli)
-    K, N = w.shape
+    if encoded and (w.ndim != 3 or w.shape[0] != len(moduli)):
+        raise ValueError(f"encoded weights must be (C, K, N) residues "
+                         f"with C={len(moduli)}, got {w.shape}")
+    K, N = w.shape[-2], w.shape[-1]
     plan = ChannelPlan.for_matmul(moduli, K, signed=True)
     be = resolve_backend(backend)
-    # The ONE forward converter (DESIGN.md §10) — this used to be a third,
-    # inline mod loop.  Channel sets here need not be coprime bases (Table
-    # III n=11), hence the module-level converter rather than a full plan.
-    w_res = forward_convert(w, moduli, backend=be, interpret=interpret,
-                            dtype=plan.residue_dtype)        # (C, K, N)
+    if encoded:
+        w_res = w.astype(plan.residue_dtype)                 # no-op by rule
+    else:
+        # The ONE forward converter (DESIGN.md §10) — this used to be a
+        # third, inline mod loop.  Channel sets here need not be coprime
+        # bases (Table III n=11), hence the module-level converter rather
+        # than a full plan.
+        w_res = forward_convert(w, moduli, backend=be, interpret=interpret,
+                                dtype=plan.residue_dtype)    # (C, K, N)
     if be == "pallas":
         from repro.kernels.rns_matmul import rns_matmul
 

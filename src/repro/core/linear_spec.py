@@ -1,0 +1,98 @@
+"""LinearSpec: the structured, hashable description of a linear-layer datapath.
+
+The linear API used to be stringly typed — ``linear(x, w, "rns_int8:pallas")``
+— which meant every call site re-parsed the string, the only extension point
+was more suffix grammar, and load-time decisions (encode the weights to
+residues once?) had nowhere to live.  A :class:`LinearSpec` reifies the four
+independent choices (DESIGN.md §12):
+
+  * ``mode``            — "bf16" (plain dot in the param dtype) or "rns_int8"
+                          (the paper's residue-channel integer matmul);
+  * ``backend``         — execution engine for the whole integer pipeline:
+                          "auto" | "jnp" | "pallas" (core/channel_plan
+                          dispatch, DESIGN.md §7/§10);
+  * ``broadcast``       — broadcast-operand datapath (activations stay raw
+                          signed int8; only weights are forward-converted) vs
+                          the paper-literal per-channel conversion;
+  * ``encode_weights``  — encode the static weight pytree to residues ONCE at
+                          load time (`core/rns_tensor.encode_params`), so the
+                          hot path performs zero weight quantizations and
+                          zero weight forward conversions per call.
+
+Specs are frozen dataclasses: hashable (they ride through ``jax.jit`` static
+arguments), comparable, and resolved once per distinct config string via the
+lru-cached :meth:`LinearSpec.parse` — the deprecation shim that keeps the old
+``"bf16"`` / ``"rns_int8[:auto|jnp|pallas]"`` strings working everywhere a
+spec is accepted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from .channel_plan import BACKENDS
+
+__all__ = ["LinearSpec"]
+
+_MODES = ("bf16", "rns_int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    """Frozen, hashable linear-datapath spec (see module docstring)."""
+
+    mode: str = "bf16"             # bf16 | rns_int8
+    backend: str = "auto"          # auto | jnp | pallas (rns_int8 only)
+    broadcast: bool = True         # broadcast-operand vs per-channel datapath
+    encode_weights: bool = False   # weights pre-encoded to residues at load
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"unknown linear mode {self.mode!r} "
+                             f"(expected one of {_MODES})")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+
+    # ------------------------------------------------------------ builders --
+    @classmethod
+    def parse(cls, spec) -> "LinearSpec":
+        """Resolve a spec: ``LinearSpec`` passes through; the legacy strings
+        ``"bf16"`` / ``"rns_int8[:auto|jnp|pallas]"`` map onto structured
+        specs (the deprecation shim); anything else raises the same clear
+        ``ValueError`` the old string parser did."""
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, str):
+            return _parse_str(spec)
+        raise ValueError(f"unknown linear backend {spec!r} "
+                         "(expected a LinearSpec or a backend string)")
+
+    # ---------------------------------------------------------- properties --
+    @property
+    def is_rns(self) -> bool:
+        return self.mode == "rns_int8"
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        flags = []
+        if self.mode == "rns_int8":
+            flags.append(self.backend)
+            flags.append("broadcast" if self.broadcast else "per-channel")
+            if self.encode_weights:
+                flags.append("encoded")
+        inner = (":" + ",".join(flags)) if flags else ""
+        return f"LinearSpec({self.mode}{inner})"
+
+
+@functools.lru_cache(maxsize=256)
+def _parse_str(spec: str) -> LinearSpec:
+    # Module-level cache (not a cached classmethod: descriptor-chaining
+    # classmethods are version-fragile) — one parse per distinct string, so a
+    # config's spec is resolved once, not per linear call.
+    name, _, kernel_backend = spec.partition(":")
+    if name == "rns_int8":
+        return LinearSpec(mode="rns_int8", backend=kernel_backend or "auto")
+    if name != "bf16" or kernel_backend:
+        raise ValueError(f"unknown linear backend {spec!r} "
+                         "(expected bf16 | rns_int8[:auto|jnp|pallas])")
+    return LinearSpec()

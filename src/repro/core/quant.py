@@ -5,21 +5,34 @@ quantization: q = round(x / s), s = max|x| / 127.  The RNS path then computes
 the *exact* integer product q_x · q_w through residue channels, so the only
 approximation in the whole pipeline is this rounding step — exactly the
 accelerator setting of the paper's §I (RNS-based DNN accelerators [3], [4]).
+
+Bound convention (the PR-3 128 convention, tested in
+`tests/test_rns_tensor.py`): `quantize_int8` is *symmetric* — outputs are
+clipped to [−127, 127] and it NEVER emits −128 — while every dynamic-range
+and fold-plan bound in the framework (`rns.basis_for_int8_matmul`,
+`ChannelPlan.for_matmul(signed=True)`) is sized for the full asymmetric int8
+range including −128, because `rns_int_matmul` admits *externally supplied*
+int8 operands.  `RNSTensor.bound` records which regime a tensor is in: 127
+for self-quantized tensors (`rns_tensor.encode`), 128 for external int8
+(`RNSTensor.from_int8`) — honest metadata either way.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_int8", "dequantize"]
+__all__ = ["quantize_int8", "dequantize", "QMAX"]
 
+# Symmetric clip point: ±127.  Deliberately NOT 128 — see the module
+# docstring; −128 is admitted from external int8 but never produced here.
 QMAX = 127.0
 
 
 def quantize_int8(x, axis=-1):
     """Symmetric int8 quantization along `axis` (None = per-tensor).
 
-    Returns (q int8, scale f32 with keepdims).
+    Returns (q int8, scale f32 with keepdims).  q ∈ [−127, 127]: the clip is
+    symmetric, so −128 is never emitted (bound convention above).
     """
     ax = axis if axis is None else (axis,) if isinstance(axis, int) else axis
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=ax, keepdims=True)

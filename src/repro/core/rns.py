@@ -37,6 +37,7 @@ __all__ = [
     "n8_channels",
     "n11_channels",
     "basis_for_accumulation",
+    "basis_for_int8_matmul",
 ]
 
 # The paper's Section IV-D case study set (order as printed).
@@ -249,3 +250,17 @@ def basis_for_accumulation(max_abs: int, name: str | None = None,
             return RNSBasis(name=name or f"acc-{max_abs}", moduli=tuple(chosen))
     raise ValueError(
         f"paper n=5 set (M={prod}) cannot cover max_abs={max_abs}")
+
+
+@functools.lru_cache(maxsize=64)
+def basis_for_int8_matmul(k: int) -> RNSBasis:
+    """THE basis a K-deep int8 matmul uses — shared by the live path
+    (`rns_linear.rns_int_matmul`) and the encode-once path
+    (`rns_tensor.encode`), so pre-encoded weights are always in the same
+    channels the matmul would pick live.
+
+    Sized 128², not 127²: `rns_int_matmul` advertises exactness for ANY int8
+    operands, and int8's minimum is −128 — the dynamic range must cover
+    K·(−128)·(−128) even though `quantize_int8` itself never emits −128.
+    """
+    return basis_for_accumulation(k * 128 * 128, name=f"rns-dense-k{k}")

@@ -6,7 +6,7 @@ entirely in the paper's residue arithmetic:
   1. symmetric int8 quantization (per-row activations, per-column weights),
   2. forward conversion to the 2^5±δ residue channels of the paper's case
      study (basis auto-sized from K so the int32 accumulation provably fits
-     the dynamic range — `rns.basis_for_accumulation`),
+     the dynamic range — `rns.basis_for_int8_matmul`),
   3. per-channel integer matmul with *deferred* modular reduction — the
      multiplier paper's Stage ③ organization: no reduction inside the K loop,
      one fold ladder at the end (Stage ④).  The Stage-④ plan and the
@@ -23,10 +23,22 @@ Both conversion endpoints (steps 2 and 4) are owned by
 quantize → forward → matmul → reverse → dequant pipeline runs through Pallas
 kernels (`kernels/{rns_convert,rns_matmul}.py`) with no host round-trips.
 
+Encode-once weights (DESIGN.md §12): ``w`` may also be a pre-encoded
+:class:`~repro.core.rns_tensor.RNSTensor` — `rns_tensor.encode(w)` ran
+Stage ② for the weight exactly once at load time — in which case steps 1–2
+apply to the *activations only* and the matmul consumes the stored residues
+directly: zero weight quantizations, zero weight forward conversions per
+call, outputs bit-identical to the live-quantization path (the encode uses
+the identical quantizer, converter, basis, and dequant op order).
+
 Backward: straight-through estimator — gradients flow as if the layer were a
 dense f32 matmul (`jax.custom_vjp`); the forward is *exactly* the int8
 product (tested against an int64 oracle), so training sees a deterministic
 quantized forward with full-precision gradients, the standard QAT setup.
+For an encoded weight the STE reference is the *dequantized* weight ŵ = q̂·s
+(the raw f32 weight no longer exists), and the weight leaves receive zero
+cotangents — residues are integer leaves, encoded weights are a serving-time
+artifact, not a trainable parameter.
 """
 from __future__ import annotations
 
@@ -34,21 +46,20 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import channel_plan as cp
 from .conversion_plan import ConversionPlan
 from .quant import quantize_int8
-from .rns import RNSBasis, basis_for_accumulation
+from .rns import RNSBasis, basis_for_int8_matmul
+from .rns_tensor import RNSTensor
 
 __all__ = ["rns_dense", "rns_int_matmul", "reconstruct_mrc"]
 
-
-@functools.lru_cache(maxsize=64)
-def _basis_for_k(k: int) -> RNSBasis:
-    # 128², not 127²: rns_int_matmul advertises exactness for ANY int8
-    # operands, and int8's minimum is −128 — the dynamic range must cover
-    # K·(−128)·(−128) even though quantize_int8 itself never emits −128.
-    return basis_for_accumulation(k * 128 * 128, name=f"rns-dense-k{k}")
+# Backwards-compatible alias — the basis rule now lives in `core/rns` so the
+# encode-once layer (`rns_tensor.encode`) and this live path provably share
+# it (same lru cache, same channels).
+_basis_for_k = basis_for_int8_matmul
 
 
 def reconstruct_mrc(residues, basis: RNSBasis, *, backend: str = "auto",
@@ -78,6 +89,11 @@ def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
     activations stay raw signed int8, only weights are forward-converted) vs
     the paper-literal per-channel conversion (the §Perf baseline).
 
+    ``wq`` may be a pre-encoded :class:`~repro.core.rns_tensor.RNSTensor`
+    (its (C, K, N) residues feed the matmul directly — no weight conversion
+    pass, DESIGN.md §12); otherwise it is a raw (K, N) int8 array converted
+    live.
+
     ``backend``/``interpret`` select the execution engine end-to-end
     (DESIGN.md §7/§10): forward conversion, channel matmul, and MRC reverse
     conversion all dispatch on it — "jnp" (fused XLA), "pallas" (the
@@ -85,26 +101,44 @@ def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
     the (M, N) output and fuses the dequant multiply into the reverse
     converter.
     """
-    basis = basis or _basis_for_k(xq.shape[-1])
+    encoded = isinstance(wq, RNSTensor)
+    if encoded:
+        if wq.residues.ndim != 3:
+            raise ValueError("rns_int_matmul needs an unbatched (C, K, N) "
+                             f"encoded weight, got {wq.residues.shape}")
+        if basis is not None and tuple(basis.moduli) != wq.moduli:
+            raise ValueError(f"basis {basis.moduli} does not match encoded "
+                             f"weight channels {wq.moduli}")
+        if wq.bound > 128:
+            raise ValueError(f"encoded weight bound {wq.bound} exceeds the "
+                             "int8 operand range the basis is sized for")
+        basis = wq.basis
+    else:
+        basis = basis or basis_for_int8_matmul(xq.shape[-1])
+    # ONE shared pipeline tail for both weight sources (the encoded/live
+    # bit-parity invariant depends on these staying the same code):
     moduli = tuple(int(m) for m in basis.moduli)
     conv = ConversionPlan.for_basis(basis)
     if broadcast:
-        res = cp.matmul_broadcast(xq, wq, moduli, backend=backend,
+        res = cp.matmul_broadcast(xq, wq.residues if encoded else wq, moduli,
+                                  encoded=encoded, backend=backend,
                                   interpret=interpret)
     else:
         plan = cp.ChannelPlan.for_matmul(moduli, xq.shape[-1])
         a_res = conv.forward(xq, backend=backend, interpret=interpret)
-        b_res = conv.forward(wq, backend=backend, interpret=interpret)
+        b_res = (wq.residues.astype(plan.residue_dtype) if encoded
+                 else conv.forward(wq, backend=backend, interpret=interpret))
         res = cp.matmul(a_res, b_res, moduli,
                         backend=backend, interpret=interpret, plan=plan)
     return conv.reverse(res, backend=backend, interpret=interpret,
                         scale=scale)
 
 
-def _rns_dense_fwd_impl(x, w, backend):
+# ------------------------------------------------------- live (QAT) path ---
+def _rns_dense_fwd_impl(x, w, backend, broadcast):
     xq, sx = quantize_int8(x, axis=-1)        # per-row
     wq, sw = quantize_int8(w, axis=0)         # per-column
-    y = rns_int_matmul(xq, wq, backend=backend)
+    y = rns_int_matmul(xq, wq, broadcast=broadcast, backend=backend)
     # Deliberately NOT scale=sx*sw (the fused-dequant path): f32 multiply is
     # non-associative and (y·sx)·sw is the seed-golden-pinned order — fusing
     # changes output bits by ~1 ulp.  Callers without that constraint get
@@ -112,16 +146,16 @@ def _rns_dense_fwd_impl(x, w, backend):
     return (y * sx * sw).astype(x.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _rns_dense(x, w, backend):
-    return _rns_dense_fwd_impl(x, w, backend)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rns_dense(x, w, backend, broadcast):
+    return _rns_dense_fwd_impl(x, w, backend, broadcast)
 
 
-def _fwd(x, w, backend):
-    return _rns_dense_fwd_impl(x, w, backend), (x, w)
+def _fwd(x, w, backend, broadcast):
+    return _rns_dense_fwd_impl(x, w, backend, broadcast), (x, w)
 
 
-def _bwd(backend, res, gy):
+def _bwd(backend, broadcast, res, gy):
     x, w = res
     gy32 = gy.astype(jnp.float32)
     gx = (gy32 @ w.astype(jnp.float32).T).astype(x.dtype)
@@ -132,16 +166,78 @@ def _bwd(backend, res, gy):
 _rns_dense.defvjp(_fwd, _bwd)
 
 
-def rns_dense(x, w, backend: str = "auto"):
+# -------------------------------------------------- encoded-weight path ----
+def _rns_dense_enc_impl(x, w_res, w_scale, wt_meta, backend, broadcast):
+    basis, bound, signed = wt_meta
+    xq, sx = quantize_int8(x, axis=-1)        # activations quantize live
+    # Rebuild the tensor with its ORIGINAL metadata (custom_vjp flattens it
+    # to array leaves + static aux) so rns_int_matmul's bound validation
+    # still sees what the caller encoded, not a default.
+    wt = RNSTensor(residues=w_res, scale=None, basis=basis, bound=bound,
+                   signed=signed)
+    y = rns_int_matmul(xq, wt, broadcast=broadcast, backend=backend)
+    # Same (y·sx)·sw float op order as the live path — with identical wq/sw
+    # (encode ran the same quantizer once) the outputs are bit-identical.
+    return (y * sx * w_scale).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _rns_dense_enc(x, w_res, w_scale, wt_meta, backend, broadcast):
+    return _rns_dense_enc_impl(x, w_res, w_scale, wt_meta, backend, broadcast)
+
+
+def _enc_fwd(x, w_res, w_scale, wt_meta, backend, broadcast):
+    y = _rns_dense_enc_impl(x, w_res, w_scale, wt_meta, backend, broadcast)
+    return y, (x, w_res, w_scale)
+
+
+def _enc_bwd(wt_meta, backend, broadcast, res, gy):
+    basis = wt_meta[0]
+    x, w_res, w_scale = res
+    # STE against the dequantized weight ŵ = q̂·s — the only weight the
+    # encoded layer has; recovered exactly via the MRC reverse converter
+    # (bwd-only, never on the serving hot path).
+    conv = ConversionPlan.for_basis(basis)
+    w_hat = conv.reverse(jnp.moveaxis(w_res, -3, 0), backend=backend)
+    w_hat = w_hat * w_scale
+    gy32 = gy.astype(jnp.float32)
+    gx = (gy32 @ w_hat.T).astype(x.dtype)
+    # Residues are integer leaves: their cotangent type is float0.  The
+    # scale gets a true zero — encoded weights are not trainable.
+    g_res = np.zeros(w_res.shape, jax.dtypes.float0)
+    return gx, g_res, jnp.zeros_like(w_scale)
+
+
+_rns_dense_enc.defvjp(_enc_fwd, _enc_bwd)
+
+
+def rns_dense(x, w, backend: str = "auto", *, broadcast: bool = True):
     """y = x @ w with the integer core in RNS; straight-through backward.
 
     Pipeline (DESIGN.md §4, conversion endpoints §10): quantize → forward
     conversion → per-channel matmul → MRC reverse conversion → dequantize.
+    ``w`` is either a raw float (K, N) weight (the QAT path: live per-call
+    quantization, STE gradients to both operands) or a pre-encoded
+    :class:`~repro.core.rns_tensor.RNSTensor` (the serving path: Stage ② for
+    the weight already ran at `rns_tensor.encode` time; this call quantizes
+    only the activations and consumes the stored residues — bit-identical
+    outputs, zero per-call weight work).
+
     ``backend`` selects the execution engine for the *whole* pipeline —
     Stage-④ dispatch AND both conversion endpoints: "auto" (Pallas on TPU,
     fused XLA elsewhere), "jnp", or "pallas".  Both produce bit-identical
     outputs (parity-tested across the paper channel sets), and under
     "pallas" forward conversion, matmul, and reverse conversion all run as
-    Pallas kernels with no host round-trips.
+    Pallas kernels with no host round-trips.  ``broadcast`` picks the fused
+    broadcast-operand datapath vs the paper-literal per-channel conversion
+    (`LinearSpec.broadcast`).
     """
-    return _rns_dense(x, w, backend)
+    if isinstance(w, RNSTensor):
+        if w.scale is None:
+            raise ValueError(
+                "rns_dense needs a dequant scale on the encoded weight; "
+                "use rns_tensor.encode (from_int8 tensors carry none)")
+        return _rns_dense_enc(x, w.residues, w.scale,
+                              (w.basis, w.bound, w.signed), backend,
+                              broadcast)
+    return _rns_dense(x, w, backend, broadcast)

@@ -1,0 +1,226 @@
+"""RNSTensor: a residue-domain array — values that *live* in the 2^n±δ channels.
+
+The paper's premise (§I, §Stage ③/④) is that operands should be held in
+residue form so reduction and conversion are deferred, yet the linear API
+used to re-quantize and re-forward-convert the *static* weight matrix on
+every call — every decode token paid Stage ② for weights that never change.
+An :class:`RNSTensor` is the missing value type (DESIGN.md §12):
+
+  * ``residues`` — canonical residues ``|q|_{m_c}`` of the quantized integer
+    tensor, channel axis at position −3: a plain weight is ``(C, K, N)``, a
+    per-layer stacked weight ``(n_blocks, C, K, N)``.  That placement is what
+    makes the type jit/vmap/scan-safe: ``lax.scan`` over stacked parameters
+    slices the leading block axis of every leaf, and the per-step slice is
+    again a valid ``(C, K, N)`` RNSTensor.  Stored in the shared residue
+    dtype (int8 when every residue fits the MXU operand registers).
+  * ``scale``    — the symmetric-quantization dequant scale (per-column,
+    keepdims), carried so the fused epilogue reproduces the live-quantization
+    float op order bit-for-bit.
+  * static metadata (pytree aux data, hashable): the :class:`RNSBasis`, the
+    operand ``bound`` (127 for self-quantized weights — `quantize_int8`
+    never emits −128 — 128 for externally supplied int8), and signedness.
+
+``encode`` / ``encode_params`` run quantize + forward conversion ONCE; the
+linear layer (`core/rns_linear.rns_dense`) then consumes residues directly —
+Stage ② for weights disappears from the hot path entirely.
+
+The class is registered as a jax pytree: ``residues``/``scale`` are leaves,
+the metadata is aux data, so RNSTensors pass through ``jax.jit`` arguments,
+``jax.vmap``, ``lax.scan`` carries/xs, and ``jax.tree.map`` unchanged
+(pytree laws tested in `tests/test_rns_tensor.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .channel_plan import residue_dtype_for
+from .conversion_plan import ConversionPlan
+from .conversion_plan import forward as _forward_convert
+from .quant import quantize_int8
+from .rns import RNSBasis, basis_for_int8_matmul
+
+__all__ = ["RNSTensor", "encode", "encode_params", "ENCODED_LINEAR_LEAVES"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class RNSTensor:
+    """A quantized tensor held as canonical residues (see module docstring).
+
+    Dynamic leaves: ``residues`` (int, (*B, C, K, N)) and ``scale``
+    (f32, (*B, 1, N); ``None`` for externally supplied raw int8).
+    Static aux data: ``basis``, ``bound``, ``signed`` — hashable, so the
+    tensor rides through jit-traced pytrees without retriggering compiles.
+    """
+
+    residues: Any                       # (*B, C, K, N) int8/int32 canonical
+    scale: Optional[Any]                # (*B, 1, N) f32 dequant scale, or None
+    basis: RNSBasis                     # static: moduli + conversion tables
+    bound: int = 127                    # max |q| the residues encode
+    signed: bool = True                 # residues encode signed integers
+
+    # -------------------------------------------------------------- pytree --
+    def tree_flatten(self):
+        return (self.residues, self.scale), (self.basis, self.bound,
+                                             self.signed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        residues, scale = children
+        basis, bound, signed = aux
+        return cls(residues=residues, scale=scale, basis=basis, bound=bound,
+                   signed=signed)
+
+    # ---------------------------------------------------------- properties --
+    @property
+    def moduli(self) -> Tuple[int, ...]:
+        return tuple(int(m) for m in self.basis.moduli)
+
+    @property
+    def k(self) -> int:
+        """Channel count C."""
+        return len(self.basis.moduli)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """Logical (channel-free) shape: (*B, K, N)."""
+        s = self.residues.shape
+        return s[:-3] + s[-2:]
+
+    @property
+    def residue_dtype(self):
+        return self.residues.dtype
+
+    # ------------------------------------------------------------ decoding --
+    def dequant(self, *, backend: str = "auto",
+                interpret: Optional[bool] = None):
+        """Reverse-convert + dequantize back to float32: (*B, K, N).
+
+        Debug/gradient path only — the point of the type is that the hot
+        path never needs this (the matmul consumes residues directly).
+        """
+        plan = ConversionPlan.for_basis(self.basis)
+        res = jnp.moveaxis(self.residues, -3, 0)           # (C, *B, K, N)
+        q = plan.reverse(res, backend=backend, interpret=interpret)
+        return q if self.scale is None else q * self.scale
+
+    # ------------------------------------------------------------ builders --
+    @classmethod
+    def from_int8(cls, q, scale=None, basis: RNSBasis | None = None, *,
+                  backend: str = "auto",
+                  interpret: Optional[bool] = None) -> "RNSTensor":
+        """Encode an externally supplied int8 integer tensor (…, K, N).
+
+        ``bound`` is 128, not 127: int8 is asymmetric (min −128) and callers
+        outside `quantize_int8` may hand us saturated operands — the basis
+        and fold plans are sized for K·128·128, so the metadata stays honest
+        (`tests/test_rns_tensor.py` / the PR-3 −128 regression convention).
+        """
+        q = jnp.asarray(q)
+        basis = basis or basis_for_int8_matmul(q.shape[-2])
+        moduli = tuple(int(m) for m in basis.moduli)
+        res = _forward_convert(q, moduli, backend=backend,
+                               interpret=interpret,
+                               dtype=residue_dtype_for(moduli))
+        return cls(residues=jnp.moveaxis(res, 0, -3), scale=scale,
+                   basis=basis, bound=128, signed=True)
+
+
+@functools.partial(jax.jit, static_argnames=("moduli", "backend",
+                                             "interpret"))
+def _encode_impl(w, moduli, backend, interpret):
+    # Runs under jit ON PURPOSE, not just for speed: XLA canonicalizes the
+    # quantizer's divide-by-127 (a constant divisor) differently from eager
+    # op-by-op dispatch (reciprocal multiply, 1 ulp off for some inputs).
+    # The live path's per-call Stage ② always executes inside a compiled
+    # graph (the engine jits everything), so the encode-time scale must be
+    # produced by the same compiled lowering or `rns_dense(x, encode(w))`
+    # drifts a ulp from `rns_dense(x, w)` under jit.
+    wq, sw = quantize_int8(w, axis=-2)
+    res = _forward_convert(wq, moduli, backend=backend, interpret=interpret,
+                           dtype=residue_dtype_for(moduli))
+    return jnp.moveaxis(res, 0, -3), sw
+
+
+def encode(w, basis: RNSBasis | None = None, *, backend: str = "auto",
+           interpret: Optional[bool] = None) -> RNSTensor:
+    """Quantize + forward-convert a float weight (…, K, N) ONCE.
+
+    Exactly the Stage-② treatment the live path applies per call —
+    per-column symmetric int8 quantization (axis −2, i.e. over K) followed by
+    THE forward converter — so `rns_dense(x, encode(w))` is bit-identical to
+    `rns_dense(x, w)` under jit (the compiled regime every serving/training
+    step runs in; see `_encode_impl` on why the encode itself is jitted)
+    while skipping weight quantization + conversion on every subsequent
+    call.  Leading batch axes (stacked per-layer weights) encode exactly
+    like a loop of per-matrix encodes: the quantization axis is per-matrix
+    and the conversion is elementwise.
+
+    ``basis`` defaults to the K-sized accumulation basis the live matmul
+    would pick (`rns.basis_for_int8_matmul`).  ``bound`` is 127:
+    `quantize_int8` clips to ±127 and never emits −128 (`core/quant.py`).
+    """
+    w = jnp.asarray(w)
+    if w.ndim < 2:
+        raise ValueError(f"encode expects (..., K, N) weights, got {w.shape}")
+    K = w.shape[-2]
+    basis = basis or basis_for_int8_matmul(K)
+    moduli = tuple(int(m) for m in basis.moduli)
+    res, sw = _encode_impl(w, moduli, backend, interpret)
+    return RNSTensor(residues=res, scale=sw, basis=basis, bound=127,
+                     signed=True)
+
+
+# Which weight leaves the `models.layers.linear` datapath consumes, keyed by
+# their parent dict: exactly these are encoded by `encode_params`.  Everything
+# else (embeddings, norms, routed MoE expert banks, SSM projections — all
+# consumed by einsum/take, not `linear`) stays raw.
+ENCODED_LINEAR_LEAVES: Dict[str, Tuple[str, ...]] = {
+    "attn": ("wq", "wk", "wv", "wo"),
+    "mlp": ("w_gate", "w_up", "w_down"),
+    "shared": ("w_gate", "w_up", "w_down"),       # MoE shared expert
+}
+
+
+def encode_params(params, basis: RNSBasis | None = None, *,
+                  backend: str = "auto", interpret: Optional[bool] = None):
+    """Encode a model parameter pytree's linear weights to residues ONCE.
+
+    Walks the (nested-dict) parameter tree and replaces exactly the leaves
+    the `linear` datapath consumes (`ENCODED_LINEAR_LEAVES`) with
+    :class:`RNSTensor`s; stacked per-layer weights (leading ``n_blocks``
+    axis) encode per block.  The returned tree has the same structure — it
+    drops into `transformer.prefill`/`decode_step`/`lax.scan` unchanged —
+    and is what `serve.Engine` builds at ``__init__`` when the config's
+    :class:`~repro.core.linear_spec.LinearSpec` has ``encode_weights=True``:
+    decode then performs ZERO weight quantizations and ZERO weight forward
+    conversions inside the scan.
+    """
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            leaves = ENCODED_LINEAR_LEAVES.get(k)
+            if leaves is not None and isinstance(v, dict):
+                out[k] = {
+                    # already-encoded leaves pass through: encode_params is
+                    # idempotent, so re-wrapping an encoded Engine's params
+                    # (or an encoded-checkpoint round-trip) is safe.
+                    kk: (encode(vv, basis, backend=backend,
+                                interpret=interpret)
+                         if kk in leaves
+                         and not isinstance(vv, (dict, RNSTensor))
+                         else walk(vv))
+                    for kk, vv in v.items()
+                }
+            else:
+                out[k] = walk(v)
+        return out
+
+    return walk(params)

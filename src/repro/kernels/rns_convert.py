@@ -58,6 +58,11 @@ def rns_forward(x, moduli: tuple, *, block: int = 1024,
     Kernel twin of ``conversion_plan.forward(backend="jnp")``; negative
     inputs map to the coset representative.  Returns int32 — callers pick the
     residue dtype (the cast is free inside the surrounding jit).
+
+    This is also the encode-time converter (`rns_tensor.encode` /
+    `RNSTensor.from_int8` with ``backend="pallas"``): once a weight's
+    residues are built here, no conversion kernel runs for it again — the
+    matmul entry points accept the pre-converted stack as-is (DESIGN.md §12).
     """
     mods = tuple(int(m) for m in moduli)
     C = len(mods)

@@ -29,6 +29,12 @@ is the outermost grid dimension so each modulus channel runs independently
 int8 and every channel's grid step streams the *same* block — no C× operand
 duplication in HBM.
 
+This entry point consumes residues and ONLY residues — it never forward-
+converts.  That is what makes encode-once weights free here: a pre-encoded
+:class:`~repro.core.rns_tensor.RNSTensor`'s ``(C, K, N)`` residue stack
+feeds ``b_res`` directly (via `channel_plan.matmul_broadcast(encoded=True)`,
+DESIGN.md §12) with no conversion pass anywhere in the call.
+
 Grid: (C, M/bm, N/bn, K/bk); K is the innermost, sequential ("arbitrary")
 dimension; M/N/C are parallel.  VMEM per step ≈ bm·bk + bk·bn (int8)
 + bm·bn·4 (acc) — 128×512 blocks ≈ 192 KiB, comfortably inside the ~16 MiB

@@ -133,9 +133,10 @@ def analytic_cost(cfg: ModelConfig, shape: ShapeConfig, *,
     # backward is dense bf16 (custom_vjp), i.e. 2 of the 4 fwd-equivalents
     # with full remat, 1 of 3 without.
     flops_int8 = 0.0
-    if cfg.linear_backend.partition(":")[0] == "rns_int8":
-        from repro.core.rns_linear import _basis_for_k
-        C = _basis_for_k(d).k              # channel count (K≈d dominates)
+    spec = cfg.linear_spec
+    if spec.is_rns:
+        from repro.core.rns import basis_for_int8_matmul
+        C = basis_for_int8_matmul(d).k     # channel count (K≈d dominates)
         dense = flops_dev - (attn_ctx / eff)
         if shape.kind == "train":
             remat_on = cfg.remat and cfg.remat_policy != "none"
@@ -145,6 +146,22 @@ def analytic_cost(cfg: ModelConfig, shape: ShapeConfig, *,
         flops_int8 = dense * fwd_frac * C
         flops_dev = attn_ctx / eff + dense * (1.0 - fwd_frac)
         bk["rns_channels"] = C
+        # Stage-② for weights: each forward call quantizes (~1 op/elem) and
+        # forward-converts (C mods/elem) the static weight matrices the
+        # `linear` datapath actually serves — the LM head is a plain bf16
+        # einsum outside it, so its d·V elements are excluded (MoE routed
+        # experts / SSM projections are einsum-served too; on rns configs —
+        # dense smollm — the head is the only material phantom term).
+        # Per-device linear-weight elements = lin/(2T).  Encoded specs
+        # (LinearSpec.encode_weights: RNSTensor weights built once at load)
+        # pay ZERO of this per call — the dominant rns decode-overhead term,
+        # since at T = B tokens the weights outweigh the activations.
+        head_mult = 3.0 if shape.kind == "train" else 1.0
+        lin = max(0.0, dense - head_mult * head / eff)
+        w_elems = lin * fwd_frac / (2.0 * (T / dp_eff))
+        wconv = 0.0 if spec.encode_weights else (C + 1.0) * w_elems
+        flops_int8 += wconv
+        bk["flops_weight_conv"] = wconv
 
     # ---------------- HBM bytes (per device) -------------------------------
     from repro.models.transformer import count_params

@@ -5,4 +5,32 @@ transformer (`transformer.py`) whose blocks are parameterized by
 :class:`repro.configs.base.ModelConfig`: GQA attention (full/SWA/local-global,
 RoPE/sinusoidal, softcap), dense/GLU or MoE MLPs, Mamba2 SSD mixers, and
 Hymba-style parallel attention+SSM heads.
+
+Public surface (locked by `tests/test_api_surface.py`): the transformer
+entry points (`make_params`/`forward`/`prefill`/`decode_step`/`init_cache`,
+parameter accounting) and the `linear` datapath — which accepts raw weights
+or residue-domain :class:`~repro.core.RNSTensor`s under a structured
+:class:`~repro.core.LinearSpec` (DESIGN.md §12).
 """
+from .layers import attention, linear  # noqa: F401
+from .transformer import (  # noqa: F401
+    active_params,
+    count_params,
+    decode_step,
+    forward,
+    init_cache,
+    make_params,
+    prefill,
+)
+
+__all__ = [
+    "active_params",
+    "attention",
+    "count_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "linear",
+    "make_params",
+    "prefill",
+]

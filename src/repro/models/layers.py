@@ -7,18 +7,25 @@ Attention comes in three execution strategies:
                  (`kernels/flash_attention.py`) implements natively on TPU.
 The choice is automatic by sequence length (cfg.attn_block_kv).
 
-Linear layers dispatch on cfg.linear_backend:
-  * "bf16"     — plain dot in the param dtype.
-  * "rns_int8" — the paper's RNS integer matmul (`core/rns_linear.rns_dense`):
-                 exact int8 product through 2^5±δ residue channels with
-                 deferred folding, straight-through gradients.  An optional
-                 ":auto" / ":jnp" / ":pallas" suffix selects the execution
-                 engine for the WHOLE integer pipeline — forward conversion,
-                 Stage-④ channel matmul, and MRC reverse conversion
-                 (core/{channel_plan,conversion_plan} backend dispatch,
-                 DESIGN.md §7/§10) — e.g. "rns_int8:pallas" runs quantize →
-                 forward → matmul → reverse through the Pallas kernels with
-                 no host round-trips.
+Linear layers dispatch on a structured :class:`~repro.core.LinearSpec`
+(DESIGN.md §12; the old ``"bf16"`` / ``"rns_int8[:auto|jnp|pallas]"`` strings
+still work through ``LinearSpec.parse``, the deprecation shim):
+  * mode "bf16"     — plain dot in the param dtype.
+  * mode "rns_int8" — the paper's RNS integer matmul
+                 (`core/rns_linear.rns_dense`): exact int8 product through
+                 2^5±δ residue channels with deferred folding,
+                 straight-through gradients.  ``spec.backend`` selects the
+                 execution engine for the WHOLE integer pipeline — forward
+                 conversion, Stage-④ channel matmul, and MRC reverse
+                 conversion (core/{channel_plan,conversion_plan} backend
+                 dispatch, DESIGN.md §7/§10); ``spec.broadcast`` the
+                 broadcast-operand vs per-channel datapath.
+
+The weight operand may be a pre-encoded
+:class:`~repro.core.RNSTensor` (``rns.encode_params`` at load time, e.g. by
+`serve.Engine` when ``spec.encode_weights``): the matmul then consumes the
+stored residues directly — zero per-call weight quantization/conversion,
+bit-identical outputs.
 """
 from __future__ import annotations
 
@@ -29,10 +36,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.linear_spec import LinearSpec
 from repro.core.rns_linear import rns_dense
+from repro.core.rns_tensor import RNSTensor
 
 __all__ = [
-    "Dense", "rms_norm", "make_dense_params", "linear",
+    "rms_norm", "make_dense_params", "linear",
     "rope", "apply_rope", "sinusoidal",
     "attention", "update_cache_full", "update_cache_ring",
 ]
@@ -48,21 +57,24 @@ def make_dense_params(key, d_in: int, d_out: int, dtype, scale: float | None = N
     return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
 
 
-def linear(x, w, backend: str = "bf16"):
-    """x: (..., d_in) @ w: (d_in, d_out) under the selected backend.
+def linear(x, w, spec="bf16"):
+    """x: (..., d_in) @ w: (d_in, d_out) under the selected datapath.
 
-    ``backend`` is "bf16" or "rns_int8" with an optional kernel-backend
-    suffix ("rns_int8:pallas" / "rns_int8:jnp" / "rns_int8:auto") that
-    drives conversion AND matmul engines end-to-end (DESIGN.md §10).
+    ``spec`` is a :class:`~repro.core.LinearSpec` or a legacy backend string
+    ("bf16" / "rns_int8[:auto|jnp|pallas]", parsed by ``LinearSpec.parse``).
+    ``w`` is a raw weight array or a pre-encoded
+    :class:`~repro.core.RNSTensor` (residue-domain weights, encode-once) —
+    the latter requires the rns_int8 mode and skips Stage ② for the weight.
     """
-    name, _, kernel_backend = backend.partition(":")
-    if name == "rns_int8":
+    spec = LinearSpec.parse(spec)
+    if isinstance(w, RNSTensor) and not spec.is_rns:
+        raise ValueError(f"encoded (RNSTensor) weights need mode='rns_int8', "
+                         f"got {spec}")
+    if spec.is_rns:
         shp = x.shape
-        y = rns_dense(x.reshape(-1, shp[-1]), w, kernel_backend or "auto")
+        y = rns_dense(x.reshape(-1, shp[-1]), w, spec.backend,
+                      broadcast=spec.broadcast)
         return y.reshape(*shp[:-1], w.shape[-1])
-    if name != "bf16" or kernel_backend:
-        raise ValueError(f"unknown linear backend {backend!r} "
-                         "(expected bf16 | rns_int8[:auto|jnp|pallas])")
     return jnp.einsum("...d,df->...f", x, w)
 
 

@@ -97,10 +97,10 @@ def moe_apply(params, x, cfg):
 
     if cfg.shared_expert:
         sp = params["shared"]
-        hs = act(linear(xt, sp["w_gate"], cfg.linear_backend))
+        hs = act(linear(xt, sp["w_gate"], cfg.linear_spec))
         if cfg.glu:
-            hs = hs * linear(xt, sp["w_up"], cfg.linear_backend)
-        y = y + linear(hs, sp["w_down"], cfg.linear_backend)
+            hs = hs * linear(xt, sp["w_up"], cfg.linear_spec)
+        y = y + linear(hs, sp["w_down"], cfg.linear_spec)
 
     # load-balancing aux loss (Switch-style)
     frac_tokens = jnp.mean(sel.sum(1), axis=0)                   # (E,)

@@ -144,9 +144,9 @@ def _attn_full(p, h, cfg: ModelConfig, window, positions):
     B, S, d = h.shape
     H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
-    q = linear(x, p["attn"]["wq"], cfg.linear_backend).reshape(B, S, H, dh)
-    k = linear(x, p["attn"]["wk"], cfg.linear_backend).reshape(B, S, Hk, dh)
-    v = linear(x, p["attn"]["wv"], cfg.linear_backend).reshape(B, S, Hk, dh)
+    q = linear(x, p["attn"]["wq"], cfg.linear_spec).reshape(B, S, H, dh)
+    k = linear(x, p["attn"]["wk"], cfg.linear_spec).reshape(B, S, Hk, dh)
+    v = linear(x, p["attn"]["wv"], cfg.linear_spec).reshape(B, S, Hk, dh)
     if cfg.qk_norm:
         q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
@@ -156,7 +156,7 @@ def _attn_full(p, h, cfg: ModelConfig, window, positions):
         k = apply_rope(k, cos, sin)
     o = attention(q, k, v, positions, positions, window=window,
                   softcap=cfg.softcap_attn, block_kv=cfg.attn_block_kv)
-    o = linear(o.reshape(B, S, H * dh), p["attn"]["wo"], cfg.linear_backend)
+    o = linear(o.reshape(B, S, H * dh), p["attn"]["wo"], cfg.linear_spec)
     o = checkpoint_name(o, "mixer_out")
     if cfg.post_norm:
         o = rms_norm(o, p["norm_mix_post"], cfg.norm_eps)
@@ -175,9 +175,9 @@ def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache, positions=None):
     B = h.shape[0]
     H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
-    q = linear(x, p["attn"]["wq"], cfg.linear_backend).reshape(B, 1, H, dh)
-    k = linear(x, p["attn"]["wk"], cfg.linear_backend).reshape(B, 1, Hk, dh)
-    v = linear(x, p["attn"]["wv"], cfg.linear_backend).reshape(B, 1, Hk, dh)
+    q = linear(x, p["attn"]["wq"], cfg.linear_spec).reshape(B, 1, H, dh)
+    k = linear(x, p["attn"]["wk"], cfg.linear_spec).reshape(B, 1, Hk, dh)
+    v = linear(x, p["attn"]["wv"], cfg.linear_spec).reshape(B, 1, Hk, dh)
     if cfg.qk_norm:
         q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
@@ -207,7 +207,7 @@ def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache, positions=None):
     o = attention(q, ck.astype(q.dtype), cv.astype(q.dtype), qpos, kpos,
                   window=window, softcap=cfg.softcap_attn,
                   block_kv=cfg.attn_block_kv)
-    o = linear(o.reshape(B, 1, H * dh), p["attn"]["wo"], cfg.linear_backend)
+    o = linear(o.reshape(B, 1, H * dh), p["attn"]["wo"], cfg.linear_spec)
     if cfg.post_norm:
         o = rms_norm(o, p["norm_mix_post"], cfg.norm_eps)
     return o, new_cache
@@ -227,10 +227,10 @@ def _act(name: str):
 
 def _mlp(p, h, cfg: ModelConfig):
     x = rms_norm(h, p["norm_mlp"], cfg.norm_eps)
-    g = _act(cfg.act)(linear(x, p["mlp"]["w_gate"], cfg.linear_backend))
+    g = _act(cfg.act)(linear(x, p["mlp"]["w_gate"], cfg.linear_spec))
     if cfg.glu:
-        g = g * linear(x, p["mlp"]["w_up"], cfg.linear_backend)
-    o = linear(g, p["mlp"]["w_down"], cfg.linear_backend)
+        g = g * linear(x, p["mlp"]["w_up"], cfg.linear_spec)
+    o = linear(g, p["mlp"]["w_down"], cfg.linear_spec)
     o = checkpoint_name(o, "mlp_out")
     if cfg.post_norm:
         o = rms_norm(o, p["norm_mlp_post"], cfg.norm_eps)

@@ -1,1 +1,7 @@
+"""Serving: the batched decode engine (DESIGN.md §11/§12).
+
+Surface locked by `tests/test_api_surface.py`.
+"""
 from .engine import Engine  # noqa: F401
+
+__all__ = ["Engine"]

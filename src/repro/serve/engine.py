@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.rns_tensor import encode_params
 from repro.models import transformer as T
 
 __all__ = ["Engine"]
@@ -43,8 +44,21 @@ def _sample(logits, temperature: float, key):
 
 
 class Engine:
+    """Serving engine.  ``params`` is the raw checkpoint pytree; when the
+    config's :class:`~repro.core.LinearSpec` asks for encoded weights
+    (``encode_weights=True`` with an rns_int8 backend), the linear weights
+    are quantized + forward-converted to residue-domain
+    :class:`~repro.core.RNSTensor`s ONCE here (`rns_tensor.encode_params`,
+    DESIGN.md §12) — prefill and the decode scan then consume residues
+    directly and perform zero weight quantizations / forward conversions per
+    step, with greedy outputs bit-identical to the live-quantization path.
+    """
+
     def __init__(self, cfg: ModelConfig, params, smax: int = 2048):
         self.cfg = cfg
+        spec = cfg.linear_spec
+        if spec.is_rns and spec.encode_weights:
+            params = encode_params(params, backend=spec.backend)
         self.params = params
         self.smax = smax
         self._decode = jax.jit(

@@ -1,0 +1,64 @@
+"""Public-API surface lock (DESIGN.md §12, wired into CI via tier-1).
+
+A snapshot of the exported names of the public packages.  Future refactors
+that add to the surface update the snapshot here *deliberately*; refactors
+that would silently drop or rename a public symbol fail loudly instead.
+Every name must also actually resolve — `__all__` entries that point at
+nothing (the old phantom `layers.Dense`) are exactly the rot this guards
+against.
+"""
+import importlib
+
+import pytest
+
+SURFACE = {
+    "repro.core": [
+        "ChannelPlan",
+        "ConversionPlan",
+        "LinearSpec",
+        "QMAX",
+        "RNSBasis",
+        "RNSTensor",
+        "basis_for_accumulation",
+        "basis_for_int8_matmul",
+        "dequantize",
+        "encode",
+        "encode_params",
+        "paper_n5_basis",
+        "quantize_int8",
+        "reconstruct_mrc",
+        "rns_dense",
+        "rns_int_matmul",
+        "tau_basis",
+    ],
+    "repro.models": [
+        "active_params",
+        "attention",
+        "count_params",
+        "decode_step",
+        "forward",
+        "init_cache",
+        "linear",
+        "make_params",
+        "prefill",
+    ],
+    "repro.serve": [
+        "Engine",
+    ],
+}
+
+
+@pytest.mark.parametrize("module", sorted(SURFACE))
+def test_surface_snapshot(module):
+    mod = importlib.import_module(module)
+    assert sorted(mod.__all__) == sorted(SURFACE[module]), (
+        f"{module} public surface changed — if intentional, update the "
+        "snapshot in tests/test_api_surface.py")
+
+
+@pytest.mark.parametrize("module", sorted(SURFACE))
+def test_surface_names_resolve(module):
+    mod = importlib.import_module(module)
+    for name in SURFACE[module]:
+        assert getattr(mod, name, None) is not None, (
+            f"{module}.{name} is exported but does not resolve")

@@ -95,3 +95,33 @@ def test_rns_backend_int8_accounting():
                       n_pods=1, data=1, model=1)
     assert c.flops_int8 > 0
     assert "rns_channels" in c.breakdown
+
+
+def test_rns_weight_conversion_dropped_when_encoded():
+    """Encode-once accounting (DESIGN.md §12): the live rns path pays a
+    per-call Stage-② weight term (quantize + C forward mods per weight
+    element); with `encode_weights=True` that term is zero — and at decode
+    (T = B tokens) it is the dominant share of the int8 work, which is the
+    whole point of the redesign."""
+    live = dataclasses.replace(get_smoke_config("rns-smollm-135m"), **WIDE)
+    enc = dataclasses.replace(live, encode_weights=True)
+    shp = ShapeConfig("d", 128, 2, "decode")
+    c_live = analytic_cost(live, shp, n_pods=1, data=1, model=1)
+    c_enc = analytic_cost(enc, shp, n_pods=1, data=1, model=1)
+    assert c_live.breakdown["flops_weight_conv"] > 0
+    assert c_enc.breakdown["flops_weight_conv"] == 0.0
+    assert c_enc.flops_int8 < c_live.flops_int8
+    # decode at small batch: the per-call weight term is a material share of
+    # the int8 work (~(C+1) of (3C+1) ops per linear-weight element at B=2,
+    # LM-head elements excluded — the head never passes through `linear`) …
+    assert c_live.breakdown["flops_weight_conv"] > 0.15 * c_live.flops_int8
+    # … and amortizes away as tokens grow (prefill at S=128 ⇒ ~1/128 the
+    # per-token weight cost): encode-once matters most exactly at decode.
+    c_pf = analytic_cost(live, ShapeConfig("p", 128, 2, "prefill"),
+                         n_pods=1, data=1, model=1)
+    assert (c_pf.breakdown["flops_weight_conv"] / c_pf.flops_int8
+            < 0.1 * c_live.breakdown["flops_weight_conv"] / c_live.flops_int8)
+    # bf16 configs have no weight-conv entry at all
+    bf = dataclasses.replace(live, linear_backend="bf16")
+    assert "flops_weight_conv" not in analytic_cost(
+        bf, shp, n_pods=1, data=1, model=1).breakdown

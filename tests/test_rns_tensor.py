@@ -1,0 +1,320 @@
+"""RNSTensor + LinearSpec: the residue-domain public API (DESIGN.md §12).
+
+Covers the ISSUE-4 contracts:
+  * pytree laws — tree_flatten/unflatten round-trip; passes through jit,
+    vmap, and a lax.scan carry unchanged;
+  * encode-once parity — `rns_dense(x, encode(w))` is bit-identical to the
+    live-quantization `rns_dense(x, w)` under jit (the compiled regime the
+    engine runs in), on both backends and both datapaths;
+  * STE gradients through an encoded weight;
+  * LinearSpec parsing incl. the legacy-string deprecation shim and the
+    unknown-spec ValueError;
+  * the 127/128 bound convention (`quantize_int8` never emits −128; encode
+    records bound=127, from_int8 records 128).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.linear_spec import LinearSpec
+from repro.core.quant import quantize_int8
+from repro.core.rns import basis_for_int8_matmul, paper_n5_basis
+from repro.core.rns_linear import rns_dense, rns_int_matmul
+from repro.core.rns_tensor import (ENCODED_LINEAR_LEAVES, RNSTensor, encode,
+                                   encode_params)
+
+
+def _xw(seed=0, M=8, K=96, N=16):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+    return x, w
+
+
+# ------------------------------------------------------------ pytree laws ---
+def test_tree_flatten_unflatten_roundtrip():
+    _, w = _xw()
+    wt = encode(w)
+    leaves, treedef = jax.tree_util.tree_flatten(wt)
+    assert len(leaves) == 2                     # residues + scale, no more
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, RNSTensor)
+    assert back.basis == wt.basis
+    assert back.bound == wt.bound and back.signed == wt.signed
+    assert np.asarray(back.residues).tobytes() == \
+        np.asarray(wt.residues).tobytes()
+    assert np.asarray(back.scale).tobytes() == np.asarray(wt.scale).tobytes()
+
+
+def test_passes_through_jit_unchanged():
+    _, w = _xw()
+    wt = encode(w)
+    out = jax.jit(lambda t: t)(wt)
+    assert isinstance(out, RNSTensor) and out.basis == wt.basis
+    assert np.asarray(out.residues).tobytes() == \
+        np.asarray(wt.residues).tobytes()
+    assert np.asarray(out.scale).tobytes() == np.asarray(wt.scale).tobytes()
+
+
+def test_scan_carry_unchanged():
+    _, w = _xw()
+    wt = encode(w)
+
+    def body(carry, _):
+        return carry, None
+
+    out, _ = jax.lax.scan(body, wt, None, length=4)
+    assert isinstance(out, RNSTensor) and out.basis == wt.basis
+    assert np.asarray(out.residues).tobytes() == \
+        np.asarray(wt.residues).tobytes()
+
+
+def test_vmap_over_stacked_blocks():
+    """Stacked per-layer weights (leading block axis) vmap/scan like any
+    leaf: the channel axis sits at −3, so slicing the leading axis yields a
+    valid per-block RNSTensor — the property `transformer.decode_step`'s
+    scan over params relies on."""
+    x, w = _xw()
+    ws = jnp.stack([w, 2.0 * w, -w], axis=0)          # (3, K, N)
+    wts = encode(ws)
+    assert wts.residues.shape == (3, wts.k) + w.shape
+    assert wts.scale.shape == (3, 1, w.shape[1])
+    yv = jax.vmap(lambda t: rns_dense(x, t))(wts)
+    for b in range(3):
+        want = np.asarray(rns_dense(x, encode(ws[b])))
+        assert np.allclose(np.asarray(yv[b]), want, atol=1e-5)
+
+    def body(c, t):
+        return c, rns_dense(x, t)
+
+    _, ys = jax.lax.scan(body, 0, wts)
+    assert ys.shape == yv.shape
+
+
+def test_tree_map_slices_blocks():
+    _, w = _xw()
+    wts = encode(jnp.stack([w, w + 1.0], axis=0))
+    w0 = jax.tree.map(lambda a: a[0], wts)
+    assert isinstance(w0, RNSTensor)
+    assert w0.residues.shape == (wts.k,) + w.shape
+    assert np.asarray(w0.residues).tobytes() == \
+        np.asarray(wts.residues[0]).tobytes()
+
+
+# ------------------------------------------------------- encode-once parity -
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("broadcast", [True, False])
+def test_encoded_rns_dense_bit_identical_under_jit(backend, broadcast):
+    """THE encode-once contract: pre-encoding the weight changes nothing but
+    the work — outputs are bit-identical to the live-quantization path in
+    the compiled regime (jit is how every engine/training step executes)."""
+    x, w = _xw(seed=3)
+    wt = encode(w)
+    live = jax.jit(lambda x, w: rns_dense(x, w, backend,
+                                          broadcast=broadcast))(x, w)
+    enc = jax.jit(lambda x, t: rns_dense(x, t, backend,
+                                         broadcast=broadcast))(x, wt)
+    assert np.asarray(live).tobytes() == np.asarray(enc).tobytes()
+
+
+def test_encoded_inside_scan_bit_identical():
+    x, w = _xw(seed=4)
+    wt = encode(w)
+
+    def run(wop):
+        def body(c, _):
+            return c + 1, rns_dense(x, wop)
+        return jax.lax.scan(body, 0, None, length=3)[1]
+
+    live = jax.jit(lambda: run(w))()
+    enc = jax.jit(lambda: run(wt))()
+    assert np.asarray(live).tobytes() == np.asarray(enc).tobytes()
+
+
+def test_encoded_rns_int_matmul_exact():
+    rng = np.random.default_rng(7)
+    xq = jnp.asarray(rng.integers(-128, 128, (4, 96)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-128, 128, (96, 8)), jnp.int8)
+    wt = RNSTensor.from_int8(wq)
+    assert wt.bound == 128 and wt.scale is None
+    got = np.asarray(rns_int_matmul(xq, wt))
+    want = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    assert np.array_equal(got.astype(np.int64), want)
+
+
+def test_encoded_dequant_roundtrip():
+    _, w = _xw(seed=5)
+    wt = encode(w)
+    wq, sw = jax.jit(lambda w: quantize_int8(w, axis=0))(w)
+    want = np.asarray(wq, np.float32) * np.asarray(sw)
+    assert np.allclose(np.asarray(wt.dequant()), want, atol=1e-7)
+
+
+def test_encoded_wrong_basis_rejected():
+    _, w = _xw()
+    wt = encode(w)
+    with pytest.raises(ValueError, match="does not match"):
+        rns_int_matmul(jnp.zeros((2, 96), jnp.int8), wt,
+                       basis=paper_n5_basis())
+    with pytest.raises(ValueError, match="dequant scale"):
+        rns_dense(jnp.zeros((2, 96)), RNSTensor.from_int8(
+            jnp.zeros((96, 8), jnp.int8)))
+
+
+# ---------------------------------------------------------------- gradients -
+def test_grad_through_encoded_weight_matches_ste():
+    """STE through an encoded weight: d/dx behaves as the dense matmul with
+    the dequantized weight ŵ (the only weight the encoded layer has), and is
+    within quantization error of the raw-w STE baseline.  Weight leaves get
+    zero cotangents — residues are integer (non-trainable) leaves."""
+    x, w = _xw(seed=6)
+    wt = encode(w)
+    gx = jax.grad(lambda a: jnp.sum(rns_dense(a, wt)))(x)
+    w_hat = wt.dequant()
+    gx_ref = jax.grad(lambda a: jnp.sum(a @ w_hat))(x)
+    assert np.allclose(np.asarray(gx), np.asarray(gx_ref), atol=1e-5)
+    # vs the raw-w STE baseline: equal up to int8 quantization error
+    gx_live = jax.grad(lambda a: jnp.sum(rns_dense(a, w)))(x)
+    rel = np.abs(np.asarray(gx) - np.asarray(gx_live)).max() / \
+        np.abs(np.asarray(gx_live)).max()
+    assert rel < 0.02
+
+
+def test_grad_under_jit_and_value():
+    x, w = _xw(seed=8)
+    wt = encode(w)
+
+    def loss(a, t):
+        return jnp.sum(rns_dense(a, t) ** 2)
+
+    v, gx = jax.jit(jax.value_and_grad(loss))(x, wt)
+    assert np.isfinite(float(v)) and np.isfinite(np.asarray(gx)).all()
+
+
+# ------------------------------------------------------------- encode_params
+def test_encode_params_encodes_exactly_the_linear_leaves():
+    from repro.configs.base import get_smoke_config
+    from repro.models import transformer as T
+
+    cfg = get_smoke_config("rns-smollm-135m")
+    params = T.make_params(cfg, jax.random.PRNGKey(0))
+    enc = encode_params(params)
+    # linear-consumed weights became RNSTensors…
+    blk = enc["blocks"]["sub0"]
+    for k in ENCODED_LINEAR_LEAVES["attn"]:
+        assert isinstance(blk["attn"][k], RNSTensor)
+    for k in ENCODED_LINEAR_LEAVES["mlp"]:
+        assert isinstance(blk["mlp"][k], RNSTensor)
+    # …with the stacked block axis leading (scan-sliceable)
+    assert blk["attn"]["wq"].residues.shape[0] == cfg.n_blocks
+    # …and everything else stayed raw arrays
+    assert not isinstance(enc["embed"], RNSTensor)
+    assert not isinstance(blk["norm_mix"], RNSTensor)
+    # structure is preserved
+    assert jax.tree_util.tree_structure(
+        jax.tree.map(lambda _: 0, params)) is not None
+
+
+def test_encode_params_idempotent():
+    """Re-encoding an already-encoded pytree is a no-op (an Engine rebuilt
+    from another encoded Engine's params must not crash or double-wrap)."""
+    from repro.configs.base import get_smoke_config
+    from repro.models import transformer as T
+
+    cfg = get_smoke_config("rns-smollm-135m")
+    params = T.make_params(cfg, jax.random.PRNGKey(0))
+    once = encode_params(params)
+    twice = encode_params(once)
+    wq1 = once["blocks"]["sub0"]["attn"]["wq"]
+    wq2 = twice["blocks"]["sub0"]["attn"]["wq"]
+    assert isinstance(wq2, RNSTensor) and wq2 is wq1
+
+
+def test_rns_dense_preserves_bound_metadata():
+    """rns_dense must thread the encoded tensor's bound through to the
+    matmul validation — a tensor claiming bound > 128 (operands the basis
+    is not sized for) is rejected, not silently accepted with a default."""
+    _, w = _xw()
+    wt = encode(w)
+    bad = RNSTensor(residues=wt.residues, scale=wt.scale, basis=wt.basis,
+                    bound=256, signed=True)
+    with pytest.raises(ValueError, match="bound"):
+        rns_dense(jnp.ones((2, w.shape[0]), jnp.float32), bad)
+
+
+# ----------------------------------------------------------------- quant ----
+def test_quantize_int8_never_emits_minus_128():
+    """The 127/128 bound convention (core/quant.py docstring): the symmetric
+    quantizer clips at ±127 even for adversarial inputs, while the basis/fold
+    plans are sized for −128 from external int8 — so `encode`'s bound=127
+    metadata is honest and `from_int8`'s 128 is required."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32) * 1e6)
+    x = x.at[0, 0].set(-1e30).at[1, 1].set(1e30).at[2, 2].set(0.0)
+    for axis in (-1, 0, None):
+        q, _ = quantize_int8(x, axis=axis)
+        assert int(jnp.min(q.astype(jnp.int32))) >= -127
+        assert int(jnp.max(q.astype(jnp.int32))) <= 127
+    assert encode(jnp.asarray(x)).bound == 127
+
+
+# -------------------------------------------------------------- LinearSpec --
+def test_linear_spec_parse_legacy_strings():
+    assert LinearSpec.parse("bf16") == LinearSpec()
+    assert LinearSpec.parse("rns_int8") == LinearSpec(mode="rns_int8")
+    for be in ("auto", "jnp", "pallas"):
+        s = LinearSpec.parse(f"rns_int8:{be}")
+        assert s.mode == "rns_int8" and s.backend == be
+    # idempotent on specs
+    s = LinearSpec(mode="rns_int8", backend="jnp", encode_weights=True)
+    assert LinearSpec.parse(s) is s
+
+
+def test_linear_spec_unknown_rejected():
+    for bad in ("int4", "bf16:pallas", "rns_int8:tpu", "", 42):
+        with pytest.raises(ValueError, match="unknown linear|backend must"):
+            LinearSpec.parse(bad)
+
+
+def test_linear_spec_hashable_and_jit_static():
+    s1 = LinearSpec.parse("rns_int8:jnp")
+    s2 = LinearSpec.parse("rns_int8:jnp")
+    assert s1 is s2                        # lru-cached: resolved once
+    assert hash(s1) == hash(LinearSpec(mode="rns_int8", backend="jnp"))
+    d = {s1: "a"}
+    assert d[LinearSpec(mode="rns_int8", backend="jnp")] == "a"
+
+
+def test_model_config_linear_spec_property():
+    from repro.configs.base import get_smoke_config
+
+    cfg = get_smoke_config("rns-smollm-135m-encoded")
+    spec = cfg.linear_spec
+    assert spec.is_rns and spec.encode_weights
+    cfg2 = dataclasses.replace(cfg, encode_weights=False)
+    assert not cfg2.linear_spec.encode_weights
+
+
+def test_linear_layer_spec_and_string_agree():
+    from repro.models.layers import linear
+
+    x, w = _xw(seed=11)
+    y_str = linear(x, w, "rns_int8:jnp")
+    y_spec = linear(x, w, LinearSpec(mode="rns_int8", backend="jnp"))
+    assert np.asarray(y_str).tobytes() == np.asarray(y_spec).tobytes()
+    with pytest.raises(ValueError, match="unknown linear backend"):
+        linear(x, w, "int4")
+    with pytest.raises(ValueError, match="rns_int8"):
+        linear(x, encode(w), "bf16")
+
+
+def test_basis_shared_with_live_path():
+    """encode() and the live matmul must pick the SAME basis for a given K
+    (else pre-encoded weights would live in different channels)."""
+    from repro.core.rns_linear import _basis_for_k
+
+    assert encode(jnp.ones((96, 4))).basis is basis_for_int8_matmul(96)
+    assert _basis_for_k is basis_for_int8_matmul
