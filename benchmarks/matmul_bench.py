@@ -19,13 +19,21 @@ stages (DESIGN.md §10) so the trajectory JSON captures how much of the
 integer pipeline the converter endpoints cost (the classic RNS overhead
 the ConversionPlan refactor targets),
 
+plus the **fused-vs-staged** comparison (DESIGN.md §13): the Stage ②–⑤
+megakernel (`backend="pallas_fused"`, ONE pallas_call) against the staged
+three-launch Pallas pipeline, with an estimated-HBM-bytes-moved column from
+the inter-stage tensor-traffic model — the staged path writes and re-reads
+the (C, M, N) int32 residue tensor (and the (C, K, N) weight residues)
+between launches; the fused path's inter-stage values never leave VMEM,
+
 plus the exactness check that is the RNS path's reason to exist: at deep K,
 int32 einsum accumulation is exact only below 2^31 and fp32 rounds, while
 the RNS path reproduces the int64 oracle.
 
-``--smoke`` runs one tiny shape on BOTH backends with hard exactness
-asserts — the CI guard against conversion-path regressions that would
-otherwise only surface in perf runs.
+``--smoke`` runs one tiny shape on ALL backends with hard exactness +
+bit-parity asserts — including fused ≡ staged bit-identity AND
+fused-not-slower — the CI guard against conversion-path and fused-kernel
+regressions that would otherwise only surface in perf runs.
 """
 from __future__ import annotations
 
@@ -58,6 +66,22 @@ def _time(fn, *args, reps: int = 5):
         jax.block_until_ready(fn(*args))
         best = min(best, time.perf_counter() - t0)
     return best * 1e6, out
+
+
+def _hbm_bytes(M: int, K: int, N: int, C: int, fused: bool) -> int:
+    """Estimated HBM bytes moved by the broadcast-datapath pipeline:
+    inter-stage tensor traffic (each tensor counted once per producer/
+    consumer crossing of the HBM boundary; per-tile operand re-streaming is
+    common to both paths and cancels).  Staged: operands in, weight residues
+    written + re-read, (C, M, N) int32 residues written + re-read, f32 out.
+    Fused: operands in, f32 out — every intermediate stays in VMEM."""
+    operands_in = M * K + K * N                     # int8
+    out = 4 * M * N                                 # f32
+    if fused:
+        return operands_in + out
+    w_res = C * K * N                               # int8, write + read
+    residues = 4 * C * M * N                        # int32, write + read
+    return operands_in + 2 * w_res + 2 * residues + out
 
 
 def _conversion_split(xq, wq, backend: str, reps: int = 3):
@@ -153,7 +177,44 @@ def run(shapes=None, smoke: bool = False):
             line += f" rns_pallas={t_pal:.0f}us pallas_exact={pal_exact}"
             rows.append((f"rns_matmul_pallas_{tag}", t_pal,
                          f"exact={pal_exact},vs_jnp={t_pal / t_jnp:.2f}x"))
+
+            # fused megakernel vs the staged three-launch pipeline
+            # (DESIGN.md §13) — one pallas_call, residues never in HBM.
+            rns_fus = jax.jit(functools.partial(rns_int_matmul,
+                                                backend="pallas_fused"))
+            t_fus, got_fus = _time(rns_fus, xq, wq, reps=3)
+            C = len(_basis_for_k(K).moduli)
+            hbm_staged = _hbm_bytes(M, K, N, C, fused=False)
+            hbm_fused = _hbm_bytes(M, K, N, C, fused=True)
+            fus_bitid = np.asarray(got_fus).tobytes() == \
+                np.asarray(got_pal).tobytes()
+            if smoke:
+                assert fus_bitid, \
+                    f"fused not bit-identical to staged at {tag}"
+                # not-slower guard with a scheduler-noise allowance: at the
+                # tiny smoke shape both timings are best-of-reps of a
+                # sub-ms call on a shared CI runner, where a descheduled
+                # rep can exceed the real ~1.3–2x fused margin — 1.2x
+                # still fails any genuine megakernel regression
+                assert t_fus <= t_pal * 1.2, (
+                    f"{tag}: fused slower than staged ({t_fus:.0f}us vs "
+                    f"{t_pal:.0f}us) — megakernel regression?")
+            fused_line = (f"#   fused_vs_staged[{tag}] fused={t_fus:.0f}us "
+                          f"staged={t_pal:.0f}us "
+                          f"speedup={t_pal / t_fus:.2f}x "
+                          f"hbm_est_fused={hbm_fused / 1024:.0f}KiB "
+                          f"hbm_est_staged={hbm_staged / 1024:.0f}KiB "
+                          f"bit_identical={fus_bitid}")
+            rows.append((f"rns_matmul_fused_{tag}", t_fus,
+                         f"bit_identical={fus_bitid},"
+                         f"vs_staged={t_fus / t_pal:.2f}x,"
+                         f"hbm_est_bytes={hbm_fused},"
+                         f"hbm_est_bytes_staged={hbm_staged}"))
+        else:
+            fused_line = None
         print(line)
+        if fused_line:
+            print(fused_line)
 
         # conversion share of the end-to-end path, per backend
         backends = ["jnp"] + (["pallas"] if (M, K, N) in pallas_shapes
@@ -174,7 +235,8 @@ def run(shapes=None, smoke: bool = False):
         rows.append((f"int32_matmul_{tag}", t_i32, ""))
         rows.append((f"bf16_matmul_{tag}", t_bf, ""))
     if smoke:
-        print("# smoke OK: jnp and pallas conversion paths exact + parity")
+        print("# smoke OK: jnp/pallas/pallas_fused exact, bit-identical, "
+              "fused not slower than staged")
     return rows
 
 

@@ -54,12 +54,17 @@ print("RNS matmul exact:", bool(np.allclose(np.asarray(y), oracle)))
 
 # --- 5. backend dispatch: fused XLA vs the Pallas kernels --------------------
 # One ChannelPlan (core/channel_plan) precomputes the Stage-④ fold ladders;
-# backend="jnp"|"pallas"|"auto" picks the execution engine.  Off-TPU the
-# kernel runs its bit-exact interpreter; on TPU it compiles natively.
+# backend="jnp"|"pallas"|"pallas_fused"|"auto" picks the execution engine.
+# "pallas" runs the staged kernels (three launches); "pallas_fused" the
+# Stage ②–⑤ megakernel — ONE pallas_call, residues never in HBM (DESIGN.md
+# §13; what "auto" prefers on TPU).  Off-TPU the kernels run their
+# bit-exact interpreter; on TPU they compile natively.
 y_jnp = rns_int_matmul(xq, wq, backend="jnp")
 y_pal = rns_int_matmul(xq, wq, backend="pallas")
-print("jnp and Pallas backends bit-identical:",
-      bool((np.asarray(y_jnp) == np.asarray(y_pal)).all()))
+y_fus = rns_int_matmul(xq, wq, backend="pallas_fused")
+print("jnp, Pallas, and fused-megakernel backends bit-identical:",
+      bool((np.asarray(y_jnp) == np.asarray(y_pal)).all()
+           and (np.asarray(y_jnp) == np.asarray(y_fus)).all()))
 
 # --- 6. the residue-domain public API: RNSTensor + LinearSpec ----------------
 # Weights should LIVE in the residue channels (DESIGN.md §12): rns.encode(w)

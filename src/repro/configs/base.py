@@ -71,10 +71,11 @@ class ModelConfig:
     tie_embeddings: bool = False
 
     # --- framework ---------------------------------------------------------------
-    # bf16 | rns_int8[:auto|jnp|pallas] — the paper's residue path, with an
-    # optional Stage-④ engine suffix.  This legacy string is resolved ONCE
-    # into the structured `linear_spec` (core/linear_spec.LinearSpec,
-    # DESIGN.md §12) that the model stack consumes.
+    # bf16 | rns_int8[:auto|jnp|pallas|pallas_fused] — the paper's residue
+    # path, with an optional engine suffix (pallas_fused = the single-launch
+    # Stage ②–⑤ megakernel, DESIGN.md §13; auto prefers it on TPU).  This
+    # legacy string is resolved ONCE into the structured `linear_spec`
+    # (core/linear_spec.LinearSpec, DESIGN.md §12) the model stack consumes.
     linear_backend: str = "bf16"
     # Encode the static weight pytree to residue-domain RNSTensors at load
     # time (serve.Engine / rns_tensor.encode_params): the decode hot path

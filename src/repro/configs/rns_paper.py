@@ -36,6 +36,25 @@ def smoke_pallas() -> ModelConfig:
                                linear_backend="rns_int8:pallas")
 
 
+def full_fused() -> ModelConfig:
+    """Same arch on the Stage ②–⑤ megakernel (`kernels/rns_fused.py`,
+    DESIGN.md §13): every linear runs quantize → forward conversion →
+    channel matmul → fold → MRC reverse → dequant as ONE pallas_call with
+    VMEM-resident residue accumulators.  `backend="auto"` already prefers
+    this on TPU; the explicit config pins it for A/B measurement."""
+    return dataclasses.replace(smollm_135m.full(),
+                               name="rns-smollm-135m-fused",
+                               linear_backend="rns_int8:pallas_fused",
+                               encode_weights=True)
+
+
+def smoke_fused() -> ModelConfig:
+    return dataclasses.replace(smollm_135m.smoke(),
+                               name="rns-smollm-smoke-fused",
+                               linear_backend="rns_int8:pallas_fused",
+                               encode_weights=True)
+
+
 def full_encoded() -> ModelConfig:
     """Serving cell with encode-once weights (DESIGN.md §12): `serve.Engine`
     converts the linear weights to residue-domain RNSTensors at load time,
@@ -57,3 +76,4 @@ def smoke_encoded() -> ModelConfig:
 register("rns-smollm-135m", full, smoke)
 register("rns-smollm-135m-pallas", full_pallas, smoke_pallas)
 register("rns-smollm-135m-encoded", full_encoded, smoke_encoded)
+register("rns-smollm-135m-fused", full_fused, smoke_fused)

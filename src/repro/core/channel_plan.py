@@ -48,6 +48,7 @@ __all__ = [
     "BACKENDS",
     "residue_dtype_for",
     "resolve_backend",
+    "resolve_pipeline_backend",
     "resolve_interpret",
     "matmul",
     "matmul_broadcast",
@@ -63,7 +64,7 @@ def residue_dtype_for(moduli):
 
     return jnp.int8 if max(moduli) <= 128 else jnp.int32
 
-BACKENDS = ("auto", "jnp", "pallas")
+BACKENDS = ("auto", "jnp", "pallas", "pallas_fused")
 
 # A pad rung (30, 0) is a provable no-op: every post-ladder value is < 4m <
 # 2^30, so ``v & (2^30 - 1)`` keeps it intact and the hi term contributes 0.
@@ -72,14 +73,35 @@ _PAD_RUNG = (30, 0)
 
 # --------------------------------------------------------------- dispatch ---
 def resolve_backend(backend: str) -> str:
-    """``auto`` → Pallas on TPU (native compile), fused XLA elsewhere."""
+    """Stage-level resolution: ``auto`` → Pallas on TPU (native compile),
+    fused XLA elsewhere.  ``pallas_fused`` names the whole-pipeline
+    megakernel (`kernels/rns_fused.py`), which has no per-stage form — a
+    stage-level op asked for it (e.g. the per-channel datapath falling back
+    from a fused spec, or `encode_params` under a fused LinearSpec) degrades
+    to the staged Pallas kernels."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "pallas_fused":
+        return "pallas"
+    if backend != "auto":
+        return backend
+    import jax
+
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def resolve_pipeline_backend(backend: str) -> str:
+    """Whole-pipeline resolution (`rns_int_matmul` / `rns_dense`): ``auto``
+    prefers the single-launch megakernel on TPU — the `(C, M, N)` residues
+    then never round-trip HBM between stages (DESIGN.md §13) — and fused
+    XLA elsewhere.  Explicit names pass through."""
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     if backend != "auto":
         return backend
     import jax
 
-    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return "pallas_fused" if jax.default_backend() == "tpu" else "jnp"
 
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:

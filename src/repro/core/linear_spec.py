@@ -9,8 +9,10 @@ independent choices (DESIGN.md §12):
   * ``mode``            — "bf16" (plain dot in the param dtype) or "rns_int8"
                           (the paper's residue-channel integer matmul);
   * ``backend``         — execution engine for the whole integer pipeline:
-                          "auto" | "jnp" | "pallas" (core/channel_plan
-                          dispatch, DESIGN.md §7/§10);
+                          "auto" | "jnp" | "pallas" | "pallas_fused"
+                          (core/channel_plan dispatch, DESIGN.md §7/§10;
+                          "pallas_fused" is the single-launch Stage ②–⑤
+                          megakernel of §13, which "auto" prefers on TPU);
   * ``broadcast``       — broadcast-operand datapath (activations stay raw
                           signed int8; only weights are forward-converted) vs
                           the paper-literal per-channel conversion;
@@ -42,7 +44,7 @@ class LinearSpec:
     """Frozen, hashable linear-datapath spec (see module docstring)."""
 
     mode: str = "bf16"             # bf16 | rns_int8
-    backend: str = "auto"          # auto | jnp | pallas (rns_int8 only)
+    backend: str = "auto"          # auto|jnp|pallas|pallas_fused (rns only)
     broadcast: bool = True         # broadcast-operand vs per-channel datapath
     encode_weights: bool = False   # weights pre-encoded to residues at load
 
@@ -58,9 +60,9 @@ class LinearSpec:
     @classmethod
     def parse(cls, spec) -> "LinearSpec":
         """Resolve a spec: ``LinearSpec`` passes through; the legacy strings
-        ``"bf16"`` / ``"rns_int8[:auto|jnp|pallas]"`` map onto structured
-        specs (the deprecation shim); anything else raises the same clear
-        ``ValueError`` the old string parser did."""
+        ``"bf16"`` / ``"rns_int8[:auto|jnp|pallas|pallas_fused]"`` map onto
+        structured specs (the deprecation shim); anything else raises the
+        same clear ``ValueError`` the old string parser did."""
         if isinstance(spec, cls):
             return spec
         if isinstance(spec, str):
@@ -93,6 +95,7 @@ def _parse_str(spec: str) -> LinearSpec:
     if name == "rns_int8":
         return LinearSpec(mode="rns_int8", backend=kernel_backend or "auto")
     if name != "bf16" or kernel_backend:
-        raise ValueError(f"unknown linear backend {spec!r} "
-                         "(expected bf16 | rns_int8[:auto|jnp|pallas])")
+        raise ValueError(
+            f"unknown linear backend {spec!r} "
+            "(expected bf16 | rns_int8[:auto|jnp|pallas|pallas_fused])")
     return LinearSpec()

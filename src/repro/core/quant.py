@@ -21,11 +21,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_int8", "dequantize", "QMAX"]
+__all__ = ["quantize_int8", "quant_scale", "dequantize", "QMAX"]
 
 # Symmetric clip point: ±127.  Deliberately NOT 128 — see the module
 # docstring; −128 is admitted from external int8 but never produced here.
 QMAX = 127.0
+
+
+def quant_scale(x, axis=-1):
+    """THE symmetric-quant scale rule: max|x| / 127 (keepdims, ≥ 1e-8/127).
+
+    Split out of `quantize_int8` so the fused megakernel path
+    (`kernels/rns_fused.py` — which rounds/clips *inside* the kernel and
+    only needs the scale on the host side) provably shares the exact op
+    sequence with the staged quantizer: one source for the formula means
+    the two paths cannot drift a ulp apart.
+    """
+    ax = axis if axis is None else (axis,) if isinstance(axis, int) else axis
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=ax, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / QMAX
 
 
 def quantize_int8(x, axis=-1):
@@ -34,9 +48,7 @@ def quantize_int8(x, axis=-1):
     Returns (q int8, scale f32 with keepdims).  q ∈ [−127, 127]: the clip is
     symmetric, so −128 is never emitted (bound convention above).
     """
-    ax = axis if axis is None else (axis,) if isinstance(axis, int) else axis
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=ax, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / QMAX
+    scale = quant_scale(x, axis)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -QMAX, QMAX)
     return q.astype(jnp.int8), scale
 

@@ -50,7 +50,7 @@ import numpy as np
 
 from . import channel_plan as cp
 from .conversion_plan import ConversionPlan
-from .quant import quantize_int8
+from .quant import quant_scale, quantize_int8
 from .rns import RNSBasis, basis_for_int8_matmul
 from .rns_tensor import RNSTensor
 
@@ -95,11 +95,13 @@ def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
     live.
 
     ``backend``/``interpret`` select the execution engine end-to-end
-    (DESIGN.md §7/§10): forward conversion, channel matmul, and MRC reverse
-    conversion all dispatch on it — "jnp" (fused XLA), "pallas" (the
-    kernels), or "auto" (by device).  ``scale``, if given, broadcasts against
-    the (M, N) output and fuses the dequant multiply into the reverse
-    converter.
+    (DESIGN.md §7/§10/§13): forward conversion, channel matmul, and MRC
+    reverse conversion all dispatch on it — "jnp" (fused XLA), "pallas"
+    (the staged kernels), "pallas_fused" (the single-launch megakernel,
+    broadcast mode), or "auto" (by device; prefers the megakernel on TPU).
+    ``scale``, if given, broadcasts against the (M, N) output and fuses the
+    dequant multiply into the reverse converter (or the megakernel
+    epilogue) bit-identically.
     """
     encoded = isinstance(wq, RNSTensor)
     if encoded:
@@ -119,6 +121,17 @@ def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
     # bit-parity invariant depends on these staying the same code):
     moduli = tuple(int(m) for m in basis.moduli)
     conv = ConversionPlan.for_basis(basis)
+    if broadcast and cp.resolve_pipeline_backend(backend) == "pallas_fused":
+        # The single-launch megakernel: forward conversion, Stage-③/④
+        # channel matmul, MRC reverse, and the optional dequant all execute
+        # inside ONE pallas_call — the (C, M, N) residues never touch HBM
+        # (DESIGN.md §13).  Bit-identical to the staged tail below.  The
+        # per-channel (paper-literal) datapath has no fused form and stays
+        # on the staged kernels (resolve_backend degrades pallas_fused).
+        from repro.kernels.rns_fused import rns_fused_matmul
+
+        return rns_fused_matmul(xq, wq, basis, scale=scale,
+                                interpret=interpret)
     if broadcast:
         res = cp.matmul_broadcast(xq, wq.residues if encoded else wq, moduli,
                                   encoded=encoded, backend=backend,
@@ -136,6 +149,20 @@ def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
 
 # ------------------------------------------------------- live (QAT) path ---
 def _rns_dense_fwd_impl(x, w, backend, broadcast):
+    if broadcast and cp.resolve_pipeline_backend(backend) == "pallas_fused":
+        # Megakernel datapath: the activation round/clip/cast and the
+        # (y·sx)·sw dequant epilogue run INSIDE the kernel (`scale_row`/
+        # `scale_col` replay the pinned float op order below), so neither
+        # the (M, K) int8 activations nor the (C, M, N) residues are ever
+        # materialized in HBM.  `quant_scale` is the same rule
+        # `quantize_int8` applies — one source, zero drift.
+        wq, sw = quantize_int8(w, axis=0)     # per-column
+        sx = quant_scale(x, axis=-1)          # per-row; round/clip in-kernel
+        from repro.kernels.rns_fused import rns_fused_matmul
+
+        y = rns_fused_matmul(x, wq, basis_for_int8_matmul(x.shape[-1]),
+                             quantize=True, scale_row=sx, scale_col=sw)
+        return y.astype(x.dtype)
     xq, sx = quantize_int8(x, axis=-1)        # per-row
     wq, sw = quantize_int8(w, axis=0)         # per-column
     y = rns_int_matmul(xq, wq, broadcast=broadcast, backend=backend)
@@ -169,12 +196,21 @@ _rns_dense.defvjp(_fwd, _bwd)
 # -------------------------------------------------- encoded-weight path ----
 def _rns_dense_enc_impl(x, w_res, w_scale, wt_meta, backend, broadcast):
     basis, bound, signed = wt_meta
-    xq, sx = quantize_int8(x, axis=-1)        # activations quantize live
     # Rebuild the tensor with its ORIGINAL metadata (custom_vjp flattens it
-    # to array leaves + static aux) so rns_int_matmul's bound validation
-    # still sees what the caller encoded, not a default.
+    # to array leaves + static aux) so the matmul's bound validation still
+    # sees what the caller encoded, not a default.
     wt = RNSTensor(residues=w_res, scale=None, basis=basis, bound=bound,
                    signed=signed)
+    if broadcast and cp.resolve_pipeline_backend(backend) == "pallas_fused":
+        # Megakernel datapath (see the live twin above): stored residues in,
+        # activation quantize + (y·sx)·s_w dequant inside the one launch.
+        sx = quant_scale(x, axis=-1)
+        from repro.kernels.rns_fused import rns_fused_matmul
+
+        y = rns_fused_matmul(x, wt, quantize=True, scale_row=sx,
+                             scale_col=w_scale)
+        return y.astype(x.dtype)
+    xq, sx = quantize_int8(x, axis=-1)        # activations quantize live
     y = rns_int_matmul(xq, wt, broadcast=broadcast, backend=backend)
     # Same (y·sx)·sw float op order as the live path — with identical wq/sw
     # (encode ran the same quantizer once) the outputs are bit-identical.
@@ -224,13 +260,16 @@ def rns_dense(x, w, backend: str = "auto", *, broadcast: bool = True):
     outputs, zero per-call weight work).
 
     ``backend`` selects the execution engine for the *whole* pipeline —
-    Stage-④ dispatch AND both conversion endpoints: "auto" (Pallas on TPU,
-    fused XLA elsewhere), "jnp", or "pallas".  Both produce bit-identical
-    outputs (parity-tested across the paper channel sets), and under
-    "pallas" forward conversion, matmul, and reverse conversion all run as
-    Pallas kernels with no host round-trips.  ``broadcast`` picks the fused
+    Stage-④ dispatch AND both conversion endpoints: "auto" (the fused
+    megakernel on TPU, fused XLA elsewhere), "jnp", "pallas" (staged
+    kernels), or "pallas_fused" (ONE pallas_call for quantize → forward →
+    matmul → fold → reverse → dequant, with the quantizer's round/clip and
+    the residue tensors resident in VMEM — DESIGN.md §13).  All produce
+    bit-identical outputs (parity-tested across the paper channel sets and
+    pinned to the seed goldens).  ``broadcast`` picks the fused
     broadcast-operand datapath vs the paper-literal per-channel conversion
-    (`LinearSpec.broadcast`).
+    (`LinearSpec.broadcast`; the per-channel datapath has no megakernel
+    form and degrades pallas_fused to the staged kernels).
     """
     if isinstance(w, RNSTensor):
         if w.scale is None:

@@ -1,6 +1,10 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
 Kernels (each with a pure-jnp oracle in `ref.py`):
+  rns_fused_matmul — the Stage ②–⑤ megakernel: quantize + forward conversion
+                    + per-channel matmul + fold + MRC reverse + dequant in
+                    ONE launch; the (C, M, N) residues never touch HBM
+                    (DESIGN.md §13; tiling from `tune.blocks_for`)
   rns_matmul      — per-channel RNS matmul, deferred fold epilogue (the
                     paper's multiplier organization at tile granularity)
   rns_modmul      — elementwise modular multiply over residue channels
@@ -9,7 +13,8 @@ Kernels (each with a pure-jnp oracle in `ref.py`):
                     signed correction + dequant in one VMEM pass)
   fold            — standalone Stage-④ squeeze/canonicalize
   flash_attention — blocked online-softmax attention (causal/SWA/softcap)
+  tune            — persisted block-size autotuner for the fused kernel
 """
-from . import ref  # noqa: F401
-from .ops import (flash_attention, fold, rns_forward, rns_matmul,  # noqa: F401
-                  rns_modmul, rns_reverse)
+from . import ref, tune  # noqa: F401
+from .ops import (flash_attention, fold, rns_forward,  # noqa: F401
+                  rns_fused_matmul, rns_matmul, rns_modmul, rns_reverse)

@@ -18,11 +18,12 @@ from .flash_attention import flash_attention as _flash_attention
 from .fold import fold as _fold
 from .rns_convert import rns_forward as _rns_forward
 from .rns_convert import rns_reverse as _rns_reverse
+from .rns_fused import rns_fused_matmul  # noqa: F401  (resolves its own args)
 from .rns_matmul import rns_matmul as _rns_matmul
 from .rns_modmul import rns_modmul as _rns_modmul
 
-__all__ = ["rns_matmul", "rns_modmul", "rns_forward", "rns_reverse", "fold",
-           "flash_attention", "ref"]
+__all__ = ["rns_matmul", "rns_fused_matmul", "rns_modmul", "rns_forward",
+           "rns_reverse", "fold", "flash_attention", "ref"]
 
 
 def rns_matmul(a_res, b_res, moduli, *, interpret=None, **kw):

@@ -21,6 +21,7 @@ from repro.core.conversion_plan import forward as _forward_convert
 __all__ = [
     "channel_schedules",
     "rns_matmul_ref",
+    "rns_fused_matmul_ref",
     "rns_modmul_ref",
     "rns_forward_ref",
     "rns_reverse_ref",
@@ -61,6 +62,24 @@ def rns_matmul_ref(a_res, b_res, moduli: Sequence[int]):
                      b_res.astype(jnp.int32))
     return jnp.stack([plan.apply_ladder(acc[c], c)
                       for c in range(plan.k)], axis=0)
+
+
+def rns_fused_matmul_ref(xq, wq, basis, *, scale=None):
+    """Oracle for the Stage ②–⑤ megakernel (`rns_fused.rns_fused_matmul`,
+    int8-activation form): the staged broadcast-datapath pipeline through
+    the jnp backends — the same ChannelPlan fold and ConversionPlan reverse
+    the megakernel replays in its epilogue, so agreement is bit-exact.
+    """
+    from repro.core import channel_plan as cp
+    from repro.core.rns_tensor import RNSTensor
+
+    if isinstance(wq, RNSTensor):
+        res = cp.matmul_broadcast(xq, wq.residues, basis.moduli,
+                                  encoded=True, backend="jnp")
+    else:
+        res = cp.matmul_broadcast(xq, wq, basis.moduli, backend="jnp")
+    return ConversionPlan.for_basis(basis).reverse(res, backend="jnp",
+                                                   scale=scale)
 
 
 def rns_modmul_ref(a_res, b_res, moduli: Sequence[int]):

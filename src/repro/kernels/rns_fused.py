@@ -1,0 +1,349 @@
+"""The RNS linear-pipeline megakernel: Stage ②–⑤ in ONE `pallas_call`.
+
+`rns_fused_matmul` executes the *entire* integer linear pipeline —
+
+  Stage ② (operand preparation)   → activation int8 quantization (optional,
+                                    the `rns_dense` datapath: round/clip/cast
+                                    happen per VMEM block, the (M, K) int8
+                                    activation tensor never exists in HBM)
+                                    and weight forward conversion (per-channel
+                                    `|w|_m` of the raw int8 block — or a
+                                    no-op for pre-encoded
+                                    :class:`~repro.core.rns_tensor.RNSTensor`
+                                    residues);
+  Stage ③ (carry-save accumulation) → per-channel int8 MXU dots accumulated
+                                    across the K grid dimension into a
+                                    `(C, bm, bn)` int32 VMEM scratch — all C
+                                    channel accumulators for the output tile
+                                    stay resident, *zero* reduction in the
+                                    K loop;
+  Stage ④ (squeezing + final add) → the shared fold ladder
+                                    (`ChannelPlan.fold`, signed broadcast
+                                    mode) once per tile on the last K step;
+  Stage ⑤ (reverse conversion)    → MRC digit extraction over the triangular
+                                    inverse-table schedule, 15-bit limb-Horner
+                                    recombination, signed-range correction and
+                                    the dequant multiplies — all still inside
+                                    the same kernel invocation, on values that
+                                    never left VMEM
+
+— inside one grid over (M, N) output tiles with a sequential K loop.  The
+staged ``backend="pallas"`` pipeline launches `rns_forward`, `rns_matmul`,
+and `rns_reverse` separately, so the `(C, M, N)` int32 residue tensor (C×
+larger than the f32 output) makes two full HBM round-trips between stages;
+here it is a VMEM scratch and the only HBM traffic is the operands in and
+the f32 output tile out — the paper's defer-everything principle applied to
+the memory system, not just the adder tree (DESIGN.md §13).
+
+Bit-identity: every stage replays the exact op sequence of its staged twin —
+the quantizer's round/clip formula (`core/quant.py`), `ChannelPlan.fold` on
+schedule rows streamed exactly as `kernels/rns_matmul.py` streams them, and
+the `rns_reverse` digit/limb/float epilogue (integer steps are exact, the
+float recombination and scale multiplies run in the same order) — so
+``pallas_fused`` output is bit-identical to both staged backends on every
+golden (`tests/test_kernels.py`).
+
+Tiling is autotuned: block sizes default to `kernels/tune.blocks_for`
+(cached per-(shape, dtype, backend) sweep on device, static fallback in
+interpret mode).  The ChannelPlan fold-schedule table rides along as a tiny
+VMEM operand and the ConversionPlan moduli/inverse tables as SMEM operands,
+exactly like the staged kernels stream them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import multiword as mw
+from repro.core.channel_plan import ChannelPlan, resolve_interpret
+from repro.core.conversion_plan import ConversionPlan
+from repro.core.multiword import LIMB_BITS, LIMB_MASK
+from repro.core.quant import QMAX
+from repro.core.rns import basis_for_int8_matmul
+from repro.core.rns_tensor import RNSTensor
+
+__all__ = ["rns_fused_matmul"]
+
+
+def _kernel(sched_ref, mods_ref, inv_ref, *refs, plan: ChannelPlan,
+            conv: ConversionPlan, nk: int, quantize: bool, has_srow: bool,
+            has_scol: bool, has_scale: bool, encoded: bool):
+    rest = list(refs)
+    x_ref = rest.pop(0)
+    srow_ref = rest.pop(0) if has_srow else None
+    w_ref = rest.pop(0)
+    scol_ref = rest.pop(0) if has_scol else None
+    scale_ref = rest.pop(0) if has_scale else None
+    o_ref, acc_ref = rest
+    C = plan.k
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Stage ② activations: the quantizer's exact round/clip formula
+    # (core/quant.py) on the raw block — the int8 activation tensor is never
+    # materialized in HBM.  Padding rows divide by a 1.0 pad scale (never 0).
+    if quantize:
+        a = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32)
+                               / srow_ref[...]), -QMAX, QMAX)
+        a = a.astype(jnp.int8)
+    else:
+        a = x_ref[...]
+    if plan.residue_dtype != jnp.int8:
+        a = a.astype(plan.residue_dtype)     # wide-residue bases (m > 128)
+
+    # Stage ② weights + Stage ③: per-channel forward conversion (live int8
+    # weights) feeding the MXU contraction — no reduction inside the K loop.
+    # Pre-encoded residues skip the mod entirely (the encode-once datapath).
+    for c in range(C):
+        if encoded:
+            b = w_ref[c, :, :]
+        else:
+            b = jnp.mod(w_ref[...].astype(jnp.int32),
+                        mods_ref[c]).astype(plan.residue_dtype)
+        acc_ref[c, :, :] = acc_ref[c, :, :] + jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    @pl.when(k_step == nk - 1)
+    def _epilogue():
+        # Stage ④: the shared fold ladder per channel, on schedule rows
+        # streamed exactly as kernels/rns_matmul.py streams them; signed
+        # (broadcast-operand) plans fold |acc| with the sign fix-up.  The
+        # (C, bm, bn) canonical residues live only in this kernel's values —
+        # they never touch HBM.
+        # Stage ⑤ digits: the MRC triangular schedule over the SMEM inverse
+        # table — same op order (and the same floored-mod canonicalization
+        # of a still-negative product) as ConversionPlan's twins.
+        digits = []
+        for j in range(C):
+            t = plan.fold(acc_ref[j, :, :], sched=sched_ref[j, :, :],
+                          m=mods_ref[j])
+            mj = mods_ref[j]
+            for i in range(j):
+                t = t - digits[i]
+                t = jnp.where(t < 0, t + mj, t)
+                t = jnp.mod(t * inv_ref[j, i], mj)
+            digits.append(t)
+
+        # Limb-Horner recombination in 15-bit limbs (int32-safe, no int64 —
+        # the multiword bound, m ≤ 2^15 validated by the plan), then the
+        # shared signed-range correction / float recombination helpers.
+        L = conv.nlimbs
+        acc = mw.limbs_from_scalar(digits[C - 1], L)
+        for j in range(C - 2, -1, -1):
+            mj = mods_ref[j]
+            carry = digits[j]                  # digit joins limb 0's carry-in
+            nxt = []
+            for l in range(L):
+                v = acc[l] * mj + carry
+                nxt.append(jnp.bitwise_and(v, LIMB_MASK))
+                carry = jnp.right_shift(v, LIMB_BITS)
+            acc = nxt
+        is_neg = mw.limbs_ge_const(acc, conv.half)
+        pos = mw.limbs_to_float(acc)
+        neg = mw.limbs_to_float(mw.limbs_const_minus(conv.M, acc))
+        val = jnp.where(is_neg, -neg, pos)
+
+        # Fused dequant.  Order matters for bit-parity: (y · s_row) · s_col
+        # is the seed-golden-pinned sequence of the staged rns_dense
+        # epilogue; a generic `scale` replays `reverse(scale=...)`'s single
+        # broadcast multiply (lowered to the row/col/full operand that
+        # matches its broadcast shape — at most one of the three fires).
+        if has_srow:
+            val = val * srow_ref[...]
+        if has_scol:
+            val = val * scol_ref[...]
+        if has_scale:
+            val = val * scale_ref[...]
+        o_ref[...] = val
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "conv", "quantize", "has_srow",
+                              "has_scol", "has_scale", "encoded", "bm", "bn",
+                              "bk", "interpret"))
+def _fused_call(x, srow, w, scol, scale, *, plan: ChannelPlan,
+                conv: ConversionPlan, quantize: bool, has_srow: bool,
+                has_scol: bool, has_scale: bool, encoded: bool, bm: int,
+                bn: int, bk: int, interpret: bool):
+    C = plan.k
+    M, K = x.shape
+    N = w.shape[-1]
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if has_srow and pm:
+        # pad rows quantize as 0/1.0 = 0 — never a 0/0 NaN lane
+        srow = jnp.pad(srow, ((0, pm), (0, 0)), constant_values=1.0)
+    if pk or pn:
+        w = jnp.pad(w, ((0, 0),) * (w.ndim - 2) + ((0, pk), (0, pn)))
+    if has_scol and pn:
+        scol = jnp.pad(scol, ((0, 0), (0, pn)))
+    if has_scale and (pm or pn):
+        scale = jnp.pad(scale, ((0, pm), (0, pn)))
+    Mp, Np, Kp = M + pm, N + pn, K + pk
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
+
+    R = plan.num_rungs
+    in_specs = [
+        pl.BlockSpec((C, R, 2), lambda i, j, k: (0, 0, 0)),
+        pl.BlockSpec((C,), lambda i, j, k: (0,), memory_space=pltpu.SMEM),
+        pl.BlockSpec((C, C), lambda i, j, k: (0, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+    ]
+    args = [jnp.asarray(plan.sched), jnp.asarray(plan.mods),
+            jnp.asarray(conv.inv), x]
+    if has_srow:
+        in_specs.append(pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)))
+        args.append(srow)
+    if encoded:
+        in_specs.append(pl.BlockSpec((C, bk, bn), lambda i, j, k: (0, k, j)))
+    else:
+        in_specs.append(pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)))
+    args.append(w)
+    if has_scol:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        args.append(scol)
+    if has_scale:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
+        args.append(scale)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, plan=plan, conv=conv, nk=nk,
+                          quantize=quantize, has_srow=has_srow,
+                          has_scol=has_scol, has_scale=has_scale,
+                          encoded=encoded),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((C, bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel",
+                                 "arbitrary")) if not interpret else None,
+        interpret=interpret,
+    )(*args)
+    return out[:M, :N]
+
+
+def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
+                     scale_row=None, scale_col=None, scale=None,
+                     block_m: int | None = None, block_n: int | None = None,
+                     block_k: int | None = None,
+                     interpret: bool | None = None):
+    """One-launch Stage ②–⑤ pipeline: (M, K) × (K, N) → float32 (M, N).
+
+    ``x`` is (M, K): raw signed int8 activations (the broadcast-operand
+    datapath — every channel's dot streams the same block), or, with
+    ``quantize=True``, the raw float activations plus their per-row quant
+    scale ``scale_row`` (the `rns_dense` datapath: round/clip/cast run
+    per VMEM block and the scale is re-used for the dequant epilogue).
+
+    ``w`` is the weight operand in any of the three forms the staged
+    pipeline accepts: a raw (K, N) int8 matrix (forward-converted to
+    residues per block, in VMEM), a pre-encoded
+    :class:`~repro.core.rns_tensor.RNSTensor`, or its raw (C, K, N)
+    canonical residue stack.
+
+    Dequant epilogue (all optional, fused into the kernel): ``scale_row``
+    (M, 1) then ``scale_col`` (1, N) — the staged `rns_dense` op order
+    ``(y · sx) · sw`` — or a generic ``scale`` broadcast against (M, N)
+    (the staged ``reverse(scale=...)`` single multiply).
+
+    Block sizes default to the autotuner (`kernels/tune.blocks_for`);
+    explicit ``block_*`` always win.  Output is bit-identical to the staged
+    ``backend="pallas"`` (and ``"jnp"``) pipeline for any tiling: the
+    integer stages are exact and the float epilogue replays the staged op
+    order.
+    """
+    from . import tune
+
+    encoded = isinstance(w, RNSTensor)
+    if encoded:
+        if w.residues.ndim != 3:
+            raise ValueError("rns_fused_matmul needs an unbatched (C, K, N) "
+                             f"encoded weight, got {w.residues.shape}")
+        if w.bound > 128:
+            raise ValueError(f"encoded weight bound {w.bound} exceeds the "
+                             "int8 operand range the basis is sized for")
+        if basis is not None and tuple(basis.moduli) != w.moduli:
+            raise ValueError(f"basis {basis.moduli} does not match encoded "
+                             f"weight channels {w.moduli}")
+        basis = w.basis
+        w_arr = w.residues
+    else:
+        w_arr = w
+    M, K = x.shape
+    if basis is None:
+        if w_arr.ndim == 3:
+            raise ValueError("raw (C, K, N) residues need an explicit basis")
+        basis = basis_for_int8_matmul(K)
+    moduli = tuple(int(m) for m in basis.moduli)
+    conv = ConversionPlan.for_basis(basis)
+    if not conv.device_reversible:
+        raise ValueError(
+            f"moduli {moduli} exceed the int32 limb-Horner bound "
+            f"m <= {mw.MAX_HORNER_MODULUS}; the fused kernel cannot host "
+            "this basis")
+    plan = ChannelPlan.for_matmul(moduli, K, signed=True)
+    if w_arr.ndim == 3:
+        if w_arr.shape[0] != plan.k:
+            raise ValueError(f"residue stack has {w_arr.shape[0]} channels, "
+                             f"basis has {plan.k}")
+        encoded = True
+        w_arr = w_arr.astype(plan.residue_dtype)     # no-op by the dtype rule
+    if quantize and scale_row is None:
+        raise ValueError("quantize=True needs the per-row quant scale_row")
+    if scale_row is not None and not quantize:
+        raise ValueError("scale_row is the quantize-mode row scale; int8 "
+                         "inputs fuse dequant via scale= instead")
+    if scale is not None and (scale_row is not None or scale_col is not None):
+        raise ValueError("pass either scale or scale_row/scale_col, not both")
+    N = w_arr.shape[-1]
+
+    interpret = resolve_interpret(interpret)
+    if block_m is None or block_n is None or block_k is None:
+        tbm, tbn, tbk = tune.blocks_for(M, K, N, plan.k,
+                                        dtype=str(w_arr.dtype),
+                                        interpret=interpret)
+        block_m, block_n, block_k = (block_m or tbm, block_n or tbn,
+                                     block_k or tbk)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+
+    srow = (jnp.asarray(scale_row, jnp.float32).reshape(M, 1)
+            if scale_row is not None else None)
+    scol = (jnp.asarray(scale_col, jnp.float32).reshape(1, N)
+            if scale_col is not None else None)
+    sc = None
+    if scale is not None:
+        # Lower the generic scale to the cheapest operand its broadcast
+        # shape admits — a full (M, N) stream costs HBM traffic equal to
+        # the output, so row/col/scalar scales ride the tiny specs instead
+        # (the multiply itself is elementwise either way: same bits as the
+        # staged reverse(scale=...) broadcast).
+        s = jnp.asarray(scale, jnp.float32)
+        bshape = jnp.broadcast_shapes(s.shape, (M, N))
+        if bshape != (M, N):
+            raise ValueError(f"scale {s.shape} does not broadcast "
+                             f"against the ({M}, {N}) output")
+        s2 = s.reshape((1,) * (2 - s.ndim) + s.shape) if s.ndim < 2 else s
+        if s2.shape[0] == 1:                     # scalar / (N,) / (1, N)
+            scol = jnp.broadcast_to(s2, (1, N))
+        elif s2.shape[1] == 1:                   # (M, 1)
+            srow = jnp.broadcast_to(s2, (M, 1))
+        else:
+            sc = jnp.broadcast_to(s2, (M, N))
+    return _fused_call(x, srow, w_arr, scol, sc, plan=plan, conv=conv,
+                       quantize=quantize, has_srow=srow is not None,
+                       has_scol=scol is not None, has_scale=sc is not None,
+                       encoded=encoded, bm=bm, bn=bn, bk=bk,
+                       interpret=interpret)

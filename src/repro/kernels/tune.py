@@ -1,0 +1,201 @@
+"""Block-size autotuner for the fused RNS megakernel (DESIGN.md §13).
+
+One launch is only a win if it is also a *well-tiled* launch: the fused
+kernel holds `C` int32 accumulator planes plus both operand blocks in VMEM,
+so the best (bm, bn, bk) depends on the channel count and the shape in a way
+a single static default cannot cover.  `blocks_for` resolves the tiling:
+
+  1. a persisted JSON table keyed by (backend, device, dtype, C, M, K, N) —
+     one sweep per distinct shape, ever, shared across processes and (via
+     CI caching of ``RNS_TUNE_CACHE``) across CI runs;
+  2. on a cache miss *on device* (native compile): a best-of-reps sweep over
+     the VMEM-admissible candidates, persisted;
+  3. everywhere else (the interpret path — CPU tests/CI): the static
+     fallback, clipped to the shape.  Interpret-mode timings measure the
+     Python grid loop, not the hardware, so sweeping there would poison the
+     table.
+
+Bit-identity does not depend on the tiling (the integer stages are exact and
+the float epilogue runs per output element), so the tuner is free to pick
+any admissible candidate — it changes *when* blocks are scheduled, never
+what they compute.
+
+The sweep callable is injectable (``sweep=``) so the cache/selection logic is
+unit-testable off-TPU (`tests/test_tune.py`).
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Callable, Optional, Sequence, Tuple
+
+__all__ = ["DEFAULT_BLOCKS", "CANDIDATES", "blocks_for", "cache_path",
+           "clear_memory_cache", "vmem_footprint"]
+
+Blocks = Tuple[int, int, int]
+
+# Static fallback — the staged kernel's proven default tiling.
+DEFAULT_BLOCKS: Blocks = (128, 128, 512)
+
+# Sweep candidates: MXU-aligned (multiples of the 128-lane tile; bk a
+# multiple of 256 keeps int8 sublane packing happy) spanning the
+# square/tall/wide/deep-K corners of the space.
+CANDIDATES: Tuple[Blocks, ...] = (
+    (128, 128, 512),
+    (128, 128, 1024),
+    (128, 256, 512),
+    (256, 128, 512),
+    (256, 256, 256),
+    (128, 128, 256),
+    (64, 128, 512),
+    (128, 64, 512),
+)
+
+# VMEM budget the candidate filter admits against (per-core VMEM is ~16 MiB;
+# leave headroom for double buffering of the streamed operands).
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+_MEMORY_CACHE: dict = {}
+
+
+def cache_path() -> Path:
+    """The persisted tuning table: ``$RNS_TUNE_CACHE`` or a user-cache
+    default.  CI caches this path between runs (.github/workflows/ci.yml)."""
+    return Path(os.environ.get(
+        "RNS_TUNE_CACHE",
+        os.path.join("~", ".cache", "repro-rns", "tune.json"))).expanduser()
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process table (tests re-point RNS_TUNE_CACHE)."""
+    _MEMORY_CACHE.clear()
+
+
+def vmem_footprint(blocks: Blocks, C: int, *, itemsize: int = 1,
+                   encoded: bool = True) -> int:
+    """Approximate per-step VMEM bytes of the fused kernel at this tiling:
+    activation block + weight block(s) + the (C, bm, bn) int32 accumulator
+    scratch + the f32 output tile."""
+    bm, bn, bk = blocks
+    w_blocks = C if encoded else 1
+    return (bm * bk * itemsize + w_blocks * bk * bn * itemsize
+            + C * bm * bn * 4 + bm * bn * 4)
+
+
+def _clip(blocks: Blocks, M: int, K: int, N: int) -> Blocks:
+    bm, bn, bk = blocks
+    return (min(bm, M), min(bn, N), min(bk, K))
+
+
+def _load_table() -> dict:
+    path = cache_path()
+    key = str(path)
+    if key not in _MEMORY_CACHE:
+        table = {}
+        try:
+            table = json.loads(path.read_text())
+            if not isinstance(table, dict):
+                table = {}
+        except (OSError, ValueError):
+            table = {}
+        _MEMORY_CACHE[key] = table
+    return _MEMORY_CACHE[key]
+
+
+def _save_table(table: dict) -> None:
+    path = cache_path()
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(table, indent=1, sort_keys=True))
+    except OSError:
+        pass                     # read-only FS: keep the in-memory table
+
+
+def _shape_key(M: int, K: int, N: int, C: int, dtype: str,
+               backend: str) -> str:
+    import jax
+
+    # device_kind, not the platform string: a table swept on one TPU
+    # generation must not be a key hit on another (different VMEM/MXU).
+    kind = jax.devices()[0].device_kind.replace(" ", "-")
+    return f"{backend}/{kind}/{dtype}/C{C}/M{M}xK{K}xN{N}"
+
+
+def _default_sweep(M: int, K: int, N: int, C: int) -> Callable[[Blocks],
+                                                               float]:
+    """Time the real fused kernel on synthetic int8 operands (device path
+    only — `blocks_for` never calls this under interpret)."""
+    import time
+
+    import jax
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core.rns import basis_for_int8_matmul
+    from .rns_fused import rns_fused_matmul
+
+    rng = np.random.default_rng(0)
+    xq = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+    basis = basis_for_int8_matmul(K)
+
+    def run(blocks: Blocks, reps: int = 3) -> float:
+        bm, bn, bk = blocks
+        fn = lambda a, b: rns_fused_matmul(a, b, basis, block_m=bm,
+                                           block_n=bn, block_k=bk)
+        jax.block_until_ready(fn(xq, wq))            # compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(xq, wq))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return run
+
+
+def blocks_for(M: int, K: int, N: int, C: int, *, dtype: str = "int8",
+               backend: str = "pallas_fused", interpret: bool | None = None,
+               sweep: Optional[Callable[[Blocks], float]] = None,
+               candidates: Optional[Sequence[Blocks]] = None,
+               persist: bool = True) -> Blocks:
+    """Resolve (block_m, block_n, block_k) for one fused-kernel shape.
+
+    Table hit → the cached choice.  Miss on device (or with an injected
+    ``sweep``) → sweep the VMEM-admissible candidates, persist the winner.
+    Miss under interpret with no injected sweep → the static fallback
+    (clipped), *without* writing the table.
+    """
+    from repro.core.channel_plan import resolve_interpret
+
+    table = _load_table()
+    key = _shape_key(M, K, N, C, dtype, backend)
+    hit = table.get(key)
+    if hit is not None:
+        return _clip(tuple(int(v) for v in hit), M, K, N)
+
+    if sweep is None:
+        if resolve_interpret(interpret):
+            return _clip(DEFAULT_BLOCKS, M, K, N)
+        sweep = _default_sweep(M, K, N, C)
+
+    pool = [tuple(c) for c in (candidates or CANDIDATES)
+            if vmem_footprint(tuple(c), C) <= VMEM_BUDGET_BYTES]
+    if not pool:
+        pool = [DEFAULT_BLOCKS]
+    # Clipping collapses candidates at small shapes — sweep distinct ones.
+    seen, distinct = set(), []
+    for c in pool:
+        cl = _clip(c, M, K, N)
+        if cl not in seen:
+            seen.add(cl)
+            distinct.append(cl)
+    best = min(distinct, key=sweep)
+    if persist:
+        # persist=False leaves BOTH tables untouched — an experimental
+        # sweep must not leak into the shared in-memory dict, where a later
+        # persisting call would flush it to disk as a tuned-on-device hit.
+        table[key] = list(best)
+        _save_table(table)
+    return best

@@ -110,8 +110,8 @@ class Engine:
         logits, cache, pos0 = self._prefill(self.params, batch,
                                             smax=self.smax)
         run = self._scan_fn(max_new_tokens, temperature, eos_id)
-        first, done0, toks, emit = run(self.params, logits, cache,
-                                       batch["pad"], pos0, jnp.int32(seed))
+        first, done0, toks, emit, _ = run(self.params, logits, cache,
+                                          batch["pad"], pos0, jnp.int32(seed))
         first = np.asarray(first)
         toks = np.asarray(toks)                       # (T-1, B)
         emit = np.asarray(emit)                       # (T-1, B) bool
@@ -138,7 +138,7 @@ class Engine:
             done0 = first == eos
             if max_new_tokens <= 1:
                 zero = jnp.zeros((0, pad.shape[0]), jnp.int32)
-                return first, done0, zero, zero.astype(bool)
+                return first, done0, zero, zero.astype(bool), cache
 
             def chain(k, _):
                 k, sub = jax.random.split(k)
@@ -159,11 +159,19 @@ class Engine:
                 # everything after it is dropped host-side.
                 return (nxt, new_done, cache, t + 1), (nxt, ~done)
 
-            (_, _, _, _), (toks, emit) = jax.lax.scan(
+            (_, _, cache, _), (toks, emit) = jax.lax.scan(
                 step, (first, done0, cache, pos0), subkeys)
-            return first, done0, toks, emit
+            # the final cache is returned ONLY so the donated prefill cache
+            # (donate_argnums below) aliases an output and XLA can actually
+            # reuse its buffers for the scan carry — callers discard it.
+            return first, done0, toks, emit, cache
 
-        fn = jax.jit(run)
+        # Donate the cache: the prefill output's KV/SSM buffers are dead the
+        # moment the scan starts, so aliasing them into the scan carry
+        # removes one full cache copy from peak HBM and the per-step
+        # defensive copies XLA would otherwise emit (tests/test_serve.py
+        # asserts the donation is warning-free, i.e. actually usable).
+        fn = jax.jit(run, donate_argnums=(2,))
         self._scan_fns[key_] = fn
         return fn
 

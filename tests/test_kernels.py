@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core.rns import basis_for_accumulation
-from repro.kernels import flash_attention, fold, rns_matmul, rns_modmul
+from repro.kernels import (flash_attention, fold, rns_fused_matmul,
+                           rns_matmul, rns_modmul)
 from repro.kernels import ref
 
 MODULI = basis_for_accumulation(1024 * 127 * 127).moduli
@@ -78,6 +79,143 @@ def test_fold_includes_pow2_channel():
     got = np.asarray(fold(jnp.asarray(x), mods, 2**31 - 1, block=4))
     want = np.stack([x[c].astype(np.int64) % mods[c] for c in range(3)])
     assert np.array_equal(got, want)
+
+
+# ----------------------------------------------------- fused megakernel ----
+# The Stage ②–⑤ single-launch pipeline (kernels/rns_fused.py, DESIGN.md §13)
+# must be bit-identical to BOTH staged backends on every datapath and basis.
+
+def _bases():
+    from repro.core.rns import N8_CHANNELS, RNSBasis, paper_n5_basis
+
+    return [
+        ("paper-n5", paper_n5_basis()),                  # incl. the 2^10
+        ("n8", RNSBasis(name="n8-set", moduli=N8_CHANNELS)),
+        # Table III's full n=11 *channel set* is not pairwise coprime
+        # (gcd(2045, 1025) = 5) so it cannot be an MRC basis — the fused
+        # pipeline (which must reverse-convert) runs on its maximal
+        # coprime subset of 2^11±δ channels.
+        ("n11", RNSBasis(name="n11-sub", moduli=(2051, 2039, 2057, 3071))),
+    ]
+
+
+@pytest.mark.parametrize("name,basis", _bases(), ids=lambda b: getattr(
+    b, "name", b))
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (9, 48, 7, 8, 8, 16),          # padding on every dim
+    (32, 64, 32, 32, 32, 32),
+])
+def test_fused_matches_staged_all_bases(name, basis, M, K, N, bm, bn, bk):
+    rng = np.random.default_rng(M * K + N)
+    xq = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int8)
+    got = np.asarray(rns_fused_matmul(xq, wq, basis, block_m=bm, block_n=bn,
+                                      block_k=bk))
+    want = np.asarray(ref.rns_fused_matmul_ref(xq, wq, basis))
+    assert got.tobytes() == want.tobytes()
+    oracle = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    assert np.array_equal(got.astype(np.int64), oracle)
+
+
+@pytest.mark.parametrize("datapath", ["live", "encoded"])
+def test_fused_both_datapaths_three_way_parity(datapath):
+    """jnp ↔ pallas ↔ pallas_fused bit-parity through rns_int_matmul on the
+    live-int8 and pre-encoded RNSTensor weight datapaths."""
+    from repro.core.rns_linear import rns_int_matmul
+    from repro.core.rns_tensor import RNSTensor
+
+    rng = np.random.default_rng(3)
+    xq = jnp.asarray(rng.integers(-128, 128, (11, 96)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-128, 128, (96, 13)), jnp.int8)
+    w = RNSTensor.from_int8(wq) if datapath == "encoded" else wq
+    outs = {be: np.asarray(rns_int_matmul(xq, w, backend=be))
+            for be in ("jnp", "pallas", "pallas_fused")}
+    assert outs["jnp"].tobytes() == outs["pallas"].tobytes()
+    assert outs["jnp"].tobytes() == outs["pallas_fused"].tobytes()
+    oracle = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    assert np.array_equal(outs["pallas_fused"].astype(np.int64), oracle)
+
+
+def test_fused_int8_corners_including_minus_128():
+    """Full int8 range incl. the −128 saturated operand: the signed bound is
+    K·128·(m−1) and the worst-case accumulator K·128·128 must fold and
+    reverse-convert exactly through the one-launch pipeline."""
+    from repro.core.rns_linear import rns_int_matmul
+
+    M, K, N = 4, 96, 8
+    rng = np.random.default_rng(42)
+    xq = rng.integers(-128, 128, (M, K)).astype(np.int8)
+    wq = rng.integers(-128, 128, (K, N)).astype(np.int8)
+    xq[0, :] = -128
+    wq[:, 0] = -128
+    xq[1, :] = 127
+    wq[:, 1] = 127
+    got = np.asarray(rns_int_matmul(jnp.asarray(xq), jnp.asarray(wq),
+                                    backend="pallas_fused"))
+    want = xq.astype(np.int64) @ wq.astype(np.int64)
+    assert int(want[0, 0]) == K * 128 * 128      # the worst-case accumulator
+    assert np.array_equal(got.astype(np.int64), want)
+
+
+def test_fused_dense_seed_golden_regression():
+    """The seed-golden rns_dense bytes (pinned since PR 1) through the fused
+    backend — the megakernel may not move a single output bit."""
+    from test_channel_plan import _GOLDEN_DENSE_HEX, _GOLDEN_INT
+
+    from repro.core.rns_linear import rns_dense, rns_int_matmul
+
+    rng = np.random.default_rng(1234)
+    x = rng.standard_normal((6, 96)).astype(np.float32)
+    w = rng.standard_normal((96, 10)).astype(np.float32)
+    y = np.asarray(rns_dense(jnp.asarray(x), jnp.asarray(w), "pallas_fused"))
+    assert y.astype(np.float32).tobytes().hex() == _GOLDEN_DENSE_HEX
+    xq = rng.integers(-127, 128, (5, 64)).astype(np.int8)
+    wq = rng.integers(-127, 128, (64, 7)).astype(np.int8)
+    yi = np.asarray(rns_int_matmul(jnp.asarray(xq), jnp.asarray(wq),
+                                   backend="pallas_fused"))
+    assert yi.astype(np.int64).tolist() == _GOLDEN_INT
+
+
+def test_fused_single_pallas_call_jaxpr():
+    """The acceptance contract: the WHOLE quantize → forward → matmul →
+    fold → reverse → dequant rns_dense pipeline lowers to exactly ONE
+    pallas_call (the staged backend lowers to three)."""
+    from repro.core.rns_linear import rns_dense
+
+    x = jnp.ones((6, 96), jnp.float32)
+    w = jnp.ones((96, 10), jnp.float32)
+    fused = str(jax.make_jaxpr(
+        lambda a, b: rns_dense(a, b, "pallas_fused"))(x, w))
+    staged = str(jax.make_jaxpr(
+        lambda a, b: rns_dense(a, b, "pallas"))(x, w))
+    assert fused.count("pallas_call") == 1
+    assert staged.count("pallas_call") == 3
+
+
+def test_fused_scale_epilogue_parity():
+    """The generic fused-dequant scale replays reverse(scale=...)'s single
+    broadcast multiply bit-for-bit."""
+    from repro.core.rns_linear import rns_int_matmul
+
+    rng = np.random.default_rng(5)
+    xq = jnp.asarray(rng.integers(-128, 128, (7, 64)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-128, 128, (64, 9)), jnp.int8)
+    s = jnp.asarray(rng.standard_normal((7, 9)), jnp.float32)
+    want = np.asarray(rns_int_matmul(xq, wq, backend="jnp", scale=s))
+    got = np.asarray(rns_int_matmul(xq, wq, backend="pallas_fused", scale=s))
+    assert got.tobytes() == want.tobytes()
+
+
+def test_fused_rejects_bad_operands():
+    basis = basis_for_accumulation(96 * 128 * 128)
+    xq = jnp.zeros((4, 96), jnp.int8)
+    with pytest.raises(ValueError, match="explicit basis"):
+        rns_fused_matmul(xq, jnp.zeros((5, 96, 8), jnp.int8))
+    with pytest.raises(ValueError, match="channels"):
+        rns_fused_matmul(xq, jnp.zeros((2, 96, 8), jnp.int8), basis)
+    with pytest.raises(ValueError, match="scale_row"):
+        rns_fused_matmul(jnp.zeros((4, 96), jnp.float32),
+                         jnp.zeros((96, 8), jnp.int8), basis, quantize=True)
 
 
 ATTN_CASES = [

@@ -75,7 +75,7 @@ def test_quantize_bounds():
     assert float(jnp.max(err)) <= float(jnp.max(s)) * 0.5 + 1e-6
 
 
-@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_fused"])
 @pytest.mark.parametrize("broadcast", [True, False])
 def test_exactness_int8_min_value(backend, broadcast):
     """−128 regression: int8 is asymmetric and `rns_int_matmul` promises

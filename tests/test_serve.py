@@ -159,6 +159,39 @@ def test_no_per_token_host_transfer_in_scan():
     assert not any("callback" in name for name in prims), prims
 
 
+def test_scan_cache_donation_usable_and_warning_free():
+    """The decode scan donates the prefill cache (donate_argnums): the
+    KV/SSM buffers are dead once the scan starts, so XLA reuses them for
+    the carry instead of holding both alive.  A donation that XLA cannot
+    apply raises the "donated buffers were not usable" warning — this test
+    pins the donation to stay *usable* (the scan fn returns the final cache
+    precisely so the donated input aliases an output)."""
+    import warnings
+
+    cfg = get_smoke_config("smollm-135m")
+    params = T.make_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, smax=64)
+    prompts = _prompts(cfg, [3, 9])
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        out = eng.generate(prompts, max_new_tokens=6)
+    donation_warnings = [w for w in caught
+                         if "donat" in str(w.message).lower()]
+    assert donation_warnings == [], [str(w.message)
+                                     for w in donation_warnings]
+    assert len(out) == 2 and all(len(o) > len(p)
+                                 for o, p in zip(out, prompts))
+    # and the donation really is wired: the prefill cache's buffers are
+    # invalidated by the scan call (donated, not copied)
+    import jax.numpy as jnp
+    batch, _ = eng._pack(prompts)
+    logits, cache, pos0 = eng._prefill(eng.params, batch, smax=eng.smax)
+    run = eng._scan_fn(6, 0.0, None)
+    run(eng.params, logits, cache, batch["pad"], pos0, jnp.int32(0))
+    leaves = jax.tree.leaves(cache)
+    assert leaves and all(leaf.is_deleted() for leaf in leaves)
+
+
 # ------------------------------------------------- encode-once weights -----
 def test_encoded_engine_bit_identical_and_zero_weight_conversions(
         monkeypatch):
@@ -211,6 +244,24 @@ def test_encoded_engine_bit_identical_and_zero_weight_conversions(
     o1 = e_live.generate(prompts, max_new_tokens=8, temperature=0.7, seed=3)
     o2 = e_enc.generate(prompts, max_new_tokens=8, temperature=0.7, seed=3)
     assert o1 == o2
+
+
+def test_fused_engine_bit_identical_to_live():
+    """The megakernel serving cell (DESIGN.md §13): an engine on the
+    `rns-smollm-135m-fused` config — encode-once weights, every linear one
+    pallas_call — emits greedy tokens bit-identical to the live
+    jnp-backend rns engine."""
+    cfg_live = get_smoke_config("rns-smollm-135m")
+    cfg_fused = get_smoke_config("rns-smollm-135m-fused")
+    assert cfg_fused.linear_spec.backend == "pallas_fused"
+    assert cfg_fused.linear_spec.encode_weights
+    params = T.make_params(cfg_live, jax.random.PRNGKey(0))
+    prompts = [[1, 2, 3, 4], [10, 11]]
+    out_live = Engine(cfg_live, params, smax=32).generate(
+        prompts, max_new_tokens=6)
+    out_fused = Engine(cfg_fused, params, smax=32).generate(
+        prompts, max_new_tokens=6)
+    assert out_fused == out_live
 
 
 def test_encoded_engine_host_scan_parity():

@@ -1,0 +1,113 @@
+"""Autotuner for the fused megakernel tiling: cache/selection logic.
+
+The sweep callable is injected, so the table behavior is fully testable on
+CPU; the interpret path must NEVER sweep (interpret timings measure the
+Python grid loop, not hardware) and must not poison the persisted table.
+"""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import tune
+
+
+@pytest.fixture()
+def tune_cache(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv("RNS_TUNE_CACHE", str(path))
+    tune.clear_memory_cache()
+    yield path
+    tune.clear_memory_cache()
+
+
+def test_interpret_fallback_is_static_and_unpersisted(tune_cache):
+    b = tune.blocks_for(64, 512, 64, 5, interpret=True)
+    assert b == tune._clip(tune.DEFAULT_BLOCKS, 64, 512, 64)
+    assert not tune_cache.exists()            # no table poisoning
+
+
+def test_sweep_picks_best_and_persists(tune_cache):
+    calls = []
+
+    def sweep(blocks):
+        calls.append(blocks)
+        # favor small bm and small bk — a candidate no static default picks
+        return blocks[0] + blocks[2] * 0.1
+
+    best = tune.blocks_for(256, 1024, 256, 5, sweep=sweep)
+    assert best == min(calls, key=lambda b: b[0] + b[2] * 0.1)
+    assert len(calls) >= 2                    # actually swept
+    table = json.loads(tune_cache.read_text())
+    assert list(best) in table.values()
+
+
+def test_table_hit_skips_sweep(tune_cache):
+    def sweep(blocks):
+        return blocks[0]
+
+    first = tune.blocks_for(128, 512, 128, 5, sweep=sweep)
+
+    def explode(blocks):                      # a second sweep would raise
+        raise AssertionError("swept despite table hit")
+
+    again = tune.blocks_for(128, 512, 128, 5, sweep=explode)
+    assert again == first
+    # the persisted table survives a process restart (simulated by dropping
+    # the in-memory cache)
+    tune.clear_memory_cache()
+    assert tune.blocks_for(128, 512, 128, 5, sweep=explode) == first
+
+
+def test_cached_entry_clips_to_smaller_shapes(tune_cache):
+    tune.blocks_for(256, 1024, 256, 5, sweep=lambda b: 0.0)
+    # same key namespace, tiny shape: distinct key → fallback, still clipped
+    b = tune.blocks_for(8, 32, 8, 5, interpret=True)
+    assert b == (8, 8, 32)
+
+
+def test_candidates_filtered_by_vmem_budget(tune_cache):
+    huge = (4096, 4096, 4096)
+    assert tune.vmem_footprint(huge, 6) > tune.VMEM_BUDGET_BYTES
+    seen = []
+
+    def sweep(blocks):
+        seen.append(blocks)
+        return 1.0
+
+    tune.blocks_for(8192, 8192, 8192, 6, sweep=sweep,
+                    candidates=[huge, (128, 128, 512)])
+    assert all(b != huge for b in seen)
+
+
+def test_persist_false_leaks_nothing(tune_cache):
+    """An experimental (persist=False) sweep must not contaminate the
+    shared table — in memory or on disk — via a later persisting call."""
+    tune.blocks_for(128, 512, 128, 5, sweep=lambda b: b[0], persist=False)
+    assert not tune_cache.exists()
+    swept = []
+    tune.blocks_for(64, 256, 64, 5, sweep=lambda b: swept.append(b) or 1.0)
+    table = json.loads(tune_cache.read_text())
+    assert len(table) == 1 and swept  # only the persisting call's entry
+
+
+def test_corrupt_table_recovers(tune_cache):
+    tune_cache.write_text("{not json")
+    tune.clear_memory_cache()
+    b = tune.blocks_for(64, 512, 64, 5, interpret=True)
+    assert b == tune._clip(tune.DEFAULT_BLOCKS, 64, 512, 64)
+
+
+def test_fused_kernel_bit_identity_across_tilings(tune_cache):
+    """The tuner's freedom is safe: ANY admissible tiling produces the same
+    bits (integer stages exact, float epilogue per-element)."""
+    from repro.kernels import rns_fused_matmul
+
+    rng = np.random.default_rng(0)
+    xq = jnp.asarray(rng.integers(-128, 128, (24, 96)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-128, 128, (96, 24)), jnp.int8)
+    outs = [np.asarray(rns_fused_matmul(xq, wq, block_m=bm, block_n=bn,
+                                        block_k=bk)).tobytes()
+            for bm, bn, bk in [(8, 8, 32), (24, 24, 96), (16, 8, 48)]]
+    assert outs[0] == outs[1] == outs[2]
