@@ -53,6 +53,22 @@ def _prompts(cfg, lens, seed=0):
     return [rng.integers(1, cfg.vocab_size, n).tolist() for n in lens]
 
 
+def _conv_flops_per_token(cfg, B: int) -> float:
+    """Analytic activation-conversion work per decoded token (int ops), from
+    the loop-correct cost model (`launch/costs.py`): quantize + C-mod forward
+    conversion per linear input element plus the MRC fold ladder per output
+    element.  0.0 for bf16 configs (no rns datapath); residue-resident
+    configs (DESIGN.md §14) drop the duplicated forward conversions, which
+    is exactly what this column makes visible in the trajectory JSON."""
+    from repro.configs.base import ShapeConfig
+    from repro.launch.costs import analytic_cost
+
+    c = analytic_cost(cfg, ShapeConfig("bench", 128, B, "decode"),
+                      n_pods=1, data=1, model=1)
+    return (c.breakdown.get("flops_act_fwd_conv", 0.0)
+            + c.breakdown.get("flops_act_rev_conv", 0.0)) / B
+
+
 def _time_generate(eng, prompts, T_new, engine, reps=3):
     out = eng.generate(prompts, max_new_tokens=T_new, engine=engine)  # warmup
     best = float("inf")
@@ -80,11 +96,14 @@ def run(configs=None, smoke: bool = False):
         equal = out_host == out_scan
         speedup = tps_scan / tps_host
         tag = f"{arch}_B{B}_T{T_new}"
+        conv_tok = _conv_flops_per_token(cfg, B)
         print(f"# {tag}: host={tps_host:.1f} tok/s scan={tps_scan:.1f} tok/s "
-              f"speedup={speedup:.2f}x greedy_equal={equal}")
+              f"speedup={speedup:.2f}x greedy_equal={equal} "
+              f"conv_flops_per_tok={conv_tok:.0f}")
         rows.append((f"decode_host_{tag}", tps_host, ""))
         rows.append((f"decode_scan_{tag}", tps_scan,
-                     f"speedup={speedup:.2f}x,equal={equal}"))
+                     f"speedup={speedup:.2f}x,equal={equal},"
+                     f"conv_flops_per_tok={conv_tok:.0f}"))
         if smoke:
             assert equal, f"{tag}: host and scan engines diverged"
             assert tps_scan > tps_host, (
@@ -119,12 +138,22 @@ def run_encoded(configs=None, smoke: bool = False):
         equal = out_live == out_enc
         speedup = tps_enc / tps_live
         tag = f"{arch}_B{B}_T{T_new}"
+        conv_tok = _conv_flops_per_token(cfg_enc, B)
+        # same cfg but domain="residue": the chained datapath's per-token
+        # activation-conversion budget — the analytic size of the win the
+        # resident configs bank (the timings above are live-vs-encoded; the
+        # resident kernel path is covered by matmul_bench's chain row).
+        conv_res = _conv_flops_per_token(
+            dataclasses.replace(cfg_enc, linear_domain="residue"), B)
         print(f"# {tag}: live={tps_live:.1f} tok/s encoded={tps_enc:.1f} "
               f"tok/s speedup={speedup:.2f}x greedy_equal={equal} "
-              f"(per-step weight quant+conversion share of decode)")
+              f"(per-step weight quant+conversion share of decode) "
+              f"conv_flops_per_tok={conv_tok:.0f} resident={conv_res:.0f}")
         rows.append((f"decode_rns_live_{tag}", tps_live, ""))
         rows.append((f"decode_rns_encoded_{tag}", tps_enc,
-                     f"speedup={speedup:.2f}x,equal={equal}"))
+                     f"speedup={speedup:.2f}x,equal={equal},"
+                     f"conv_flops_per_tok={conv_tok:.0f},"
+                     f"conv_flops_per_tok_resident={conv_res:.0f}"))
         if smoke:
             assert equal, (
                 f"{tag}: encoded-weights greedy output diverged from the "

@@ -1,0 +1,123 @@
+"""Perf-regression gate: a fresh BENCH json vs the last committed baseline.
+
+The trajectory artifacts (``BENCH_<n>.json``, written by `benchmarks.run`)
+are committed append-only — each PR lands the next ``n`` alongside its code.
+This gate closes the loop: CI re-runs the smoke benchmark, then compares the
+fresh rows against the HIGHEST ``BENCH_<n>.json`` in the committed tree
+(read via ``git show HEAD:...`` so an uncommitted fresh file never gates
+itself) and fails on order-of-magnitude regressions.
+
+Comparison rules:
+
+  * rows are matched by exact name; rows present on only one side are
+    ignored (sections grow across PRs — the gate guards regressions, not
+    coverage);
+  * ``decode_*`` rows are throughputs (tok/s): FAIL when fresh < prev / tol;
+  * every other row is a latency (µs): FAIL when fresh > prev · tol;
+  * tol defaults to 3.0 (``RNS_BENCH_GATE_TOL``) — smoke shapes on shared
+    CI runners jitter by 2x routinely; 3x is past scheduler noise and still
+    catches any real cliff (an accidental per-token host sync is 10–100x);
+  * the gate SKIPS (exit 0, loudly) when the baseline was produced on a
+    different jax backend or smoke mode — cross-device timings don't gate —
+    or when no committed baseline exists yet.
+
+Usage: PYTHONPATH=src python -m benchmarks.gate [--fresh BENCH_6.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+TOL_ENV = "RNS_BENCH_GATE_TOL"
+
+
+def _committed_baseline():
+    """(name, payload) of the highest BENCH_<n>.json in the committed tree."""
+    try:
+        names = subprocess.check_output(
+            ["git", "ls-tree", "--name-only", "HEAD"], text=True,
+            stderr=subprocess.DEVNULL).split()
+    except (OSError, subprocess.CalledProcessError):
+        return None, None
+    best, best_n = None, -1
+    for name in names:
+        m = re.fullmatch(r"BENCH_(\d+)\.json", name)
+        if m and int(m.group(1)) > best_n:
+            best, best_n = name, int(m.group(1))
+    if best is None:
+        return None, None
+    try:
+        raw = subprocess.check_output(["git", "show", f"HEAD:{best}"],
+                                      text=True, stderr=subprocess.DEVNULL)
+        return best, json.loads(raw)
+    except (OSError, subprocess.CalledProcessError, json.JSONDecodeError):
+        return best, None
+
+
+def compare(prev: dict, fresh: dict, tol: float):
+    """[(name, prev, fresh, kind)] regressions under the direction rules."""
+    prev_rows = {r["name"]: float(r["value"]) for r in prev.get("rows", [])}
+    regressions = []
+    for row in fresh.get("rows", []):
+        name, val = row["name"], float(row["value"])
+        if name not in prev_rows:
+            continue
+        old = prev_rows[name]
+        if name.startswith("decode_"):                 # throughput: higher ok
+            if old > 0 and val < old / tol:
+                regressions.append((name, old, val, "tok/s"))
+        else:                                          # latency: lower ok
+            if old > 0 and val > old * tol:
+                regressions.append((name, old, val, "us"))
+    return regressions
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="BENCH_6.json",
+                    help="fresh benchmark json to gate (BENCH_6.json)")
+    args = ap.parse_args(argv)
+
+    tol = float(os.environ.get(TOL_ENV, "3.0"))
+    base_name, prev = _committed_baseline()
+    if prev is None:
+        print(f"# gate SKIP: no committed BENCH_<n>.json baseline"
+              f"{f' (unreadable {base_name})' if base_name else ''}")
+        return 0
+    try:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"# gate FAIL: cannot read fresh {args.fresh}: {e}")
+        return 1
+    if prev.get("device") != fresh.get("device") \
+            or bool(prev.get("smoke")) != bool(fresh.get("smoke")):
+        print(f"# gate SKIP: baseline {base_name} is "
+              f"device={prev.get('device')}/smoke={prev.get('smoke')}, "
+              f"fresh is device={fresh.get('device')}/"
+              f"smoke={fresh.get('smoke')} — timings don't compare")
+        return 0
+
+    regressions = compare(prev, fresh, tol)
+    n_shared = len({r["name"] for r in fresh.get("rows", [])}
+                   & {r["name"] for r in prev.get("rows", [])})
+    print(f"# gate: {args.fresh} vs committed {base_name} "
+          f"({n_shared} shared rows, tol={tol:g}x)")
+    for name, old, val, unit in regressions:
+        arrow = "down" if unit == "tok/s" else "up"
+        print(f"# REGRESSION {name}: {old:.1f} -> {val:.1f} {unit} "
+              f"({arrow} past {tol:g}x)")
+    if regressions:
+        print(f"# gate FAIL: {len(regressions)} regression(s)")
+        return 1
+    print("# gate OK: no row regressed past tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

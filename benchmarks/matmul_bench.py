@@ -114,6 +114,98 @@ def _conversion_split(xq, wq, backend: str, reps: int = 3):
                 share=share, out=out)
 
 
+def _chain_rows(smoke: bool):
+    """Residue-resident GLU-MLP chain (DESIGN.md §14) vs the unchained
+    per-linear pipeline.
+
+    Chained: ONE `encode_activation` + gate/up residue-in launches + the
+    ``emit="residues"`` in-domain requantize + the gated down launch (one MRC
+    exit) — `rns_chain_linear` composed exactly as `models/layers.mlp_chain`.
+    Unchained: `kernels/ref.rns_fused_chain_ref`, the per-linear staged
+    composition under the SAME requantize rule — each linear pays its own
+    activation forward conversion (x twice, then the requantized up product
+    and the gate branch again before the down matmul) and its own MRC.
+
+    The derived columns carry the conversion-work split: standalone
+    activation forward-conversion elements (chained: M·d once; unchained:
+    2·M·d + 2·M·F) and reverse-side elements (equal by design — the up
+    exit's requantize costs what its MRC did, per output element).  In
+    ``--smoke`` the chained jnp path, the chained pallas_fused path
+    (interpret off-TPU) and the unchained oracle must agree BIT-identically,
+    and chaining must not be slower than the unchained jnp pipeline.
+    """
+    from repro.core.quant import quantize_int8
+    from repro.core.rns import basis_for_chain
+    from repro.core.rns_linear import rns_chain_linear
+    from repro.core.rns_tensor import encode, encode_activation
+    from repro.kernels.ref import rns_fused_chain_ref
+
+    M, d, F = (16, 64, 128) if smoke else (64, 256, 512)
+    tag = f"M{M}d{d}F{F}"
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((M, d)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((d, F)) / np.sqrt(d), jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((d, F)) / np.sqrt(d), jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((F, d)) / np.sqrt(F), jnp.float32)
+    basis = basis_for_chain(F)
+    C = len(basis.moduli)
+    enc_g, enc_u, enc_d = (encode(w, basis) for w in (wg, wu, wd))
+
+    def chained(backend):
+        def fn(xf):
+            xa = encode_activation(xf, basis, backend=backend)
+            gate_f = rns_chain_linear(xa, enc_g, backend=backend)
+            up = rns_chain_linear(xa, enc_u, emit="residues", backend=backend)
+            gq, sg = quantize_int8(jax.nn.silu(gate_f), axis=-1)
+            return rns_chain_linear(up, enc_d, gate=gq, gate_scale=sg,
+                                    backend=backend)
+        return jax.jit(fn)
+
+    unchained = jax.jit(functools.partial(
+        rns_fused_chain_ref, w_gate=enc_g, w_up=enc_u, w_down=enc_d,
+        basis=basis))
+    t_chain, got_chain = _time(chained("jnp"), x, reps=3)
+    t_ref, got_ref = _time(unchained, x, reps=3)
+    bitid = np.asarray(got_chain).tobytes() == np.asarray(got_ref).tobytes()
+    # conversion-work split (elements; ×(C+1) int ops fwd, ×(C(C+1)/2+3C) rev)
+    fwd_chain, fwd_unchain = M * d, 2 * M * d + 2 * M * F
+    rev_elems = 2 * M * F + M * d
+    if smoke or ON_TPU:
+        t_pf, got_pf = _time(chained("pallas_fused"), x, reps=1)
+        pf_bitid = np.asarray(got_pf).tobytes() == \
+            np.asarray(got_chain).tobytes()
+    else:
+        t_pf, pf_bitid = float("nan"), None
+    if smoke:
+        assert bitid, f"chained MLP not bit-identical to unchained at {tag}"
+        assert pf_bitid, \
+            f"pallas_fused chain diverges from jnp chain at {tag}"
+        # same 1.2x scheduler-noise allowance as fused-vs-staged above —
+        # chaining drops three of four standalone conversions, so a genuine
+        # regression lands far past this
+        assert t_chain <= t_ref * 1.2, (
+            f"{tag}: chained MLP slower than unchained ({t_chain:.0f}us vs "
+            f"{t_ref:.0f}us) — residency regression?")
+        print(f"# chain smoke OK: chained==unchained bitwise, "
+              f"pallas_fused==jnp, not slower ({t_chain:.0f}us vs "
+              f"{t_ref:.0f}us)")
+    print(f"# mlp_chain[{tag}] chained={t_chain:.0f}us "
+          f"unchained={t_ref:.0f}us bit_identical={bitid} C={C} "
+          f"fwd_conv_elems {fwd_chain} vs {fwd_unchain} "
+          f"(rev {rev_elems} both)")
+    rows = [(f"rns_mlp_chain_{tag}", t_chain,
+             f"bit_identical={bitid},vs_unchained={t_chain / t_ref:.2f}x,"
+             f"fwd_conv_elems={fwd_chain},"
+             f"fwd_conv_elems_unchained={fwd_unchain},"
+             f"rev_conv_elems={rev_elems}"),
+            (f"rns_mlp_unchained_{tag}", t_ref,
+             f"fwd_conv_elems={fwd_unchain},rev_conv_elems={rev_elems}")]
+    if pf_bitid is not None:
+        rows.append((f"rns_mlp_chain_fused_{tag}", t_pf,
+                     f"bit_identical={pf_bitid},interpret={not ON_TPU}"))
+    return rows
+
+
 def run(shapes=None, smoke: bool = False):
     shapes = shapes or (SMOKE_SHAPES if smoke else SHAPES)
     pallas_shapes = shapes if (ON_TPU or smoke) else shapes[:1]
@@ -234,9 +326,10 @@ def run(shapes=None, smoke: bool = False):
                          f"share={s['share']:.3f}"))
         rows.append((f"int32_matmul_{tag}", t_i32, ""))
         rows.append((f"bf16_matmul_{tag}", t_bf, ""))
+    rows.extend(_chain_rows(smoke))
     if smoke:
         print("# smoke OK: jnp/pallas/pallas_fused exact, bit-identical, "
-              "fused not slower than staged")
+              "fused not slower than staged, chained MLP == unchained")
     return rows
 
 

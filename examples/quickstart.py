@@ -90,3 +90,28 @@ spec = LinearSpec.parse("rns_int8:jnp")
 print("parsed legacy string:", spec,
       "| encoded serving spec:", LinearSpec(mode="rns_int8",
                                             encode_weights=True))
+
+# --- 7. activation residency: chain linears inside the domain ----------------
+# Back-to-back linears shouldn't round-trip the domain between launches
+# (DESIGN.md §14).  encode_activation enters ONCE; rns_chain_linear launches
+# consume residues directly; emit="residues" hands the next launch an
+# in-domain requantized activation (no MRC); the chain's one reverse
+# conversion happens at the final float exit.  Bit-identical to the
+# unchained per-linear pipeline under the shared requantize rule.
+from repro.core import (basis_for_chain, encode_activation, quantize_int8,
+                        rns_chain_linear)
+
+d, F = 256, 64
+chain_basis = basis_for_chain(F)          # sized for the gated F·127³ bound
+wg, wu = (encode(jnp.asarray(rng.standard_normal((d, F)), jnp.float32),
+                 chain_basis) for _ in range(2))
+wd = encode(jnp.asarray(rng.standard_normal((F, 8)), jnp.float32),
+            chain_basis)
+xa = encode_activation(x32[:, :d], chain_basis)   # the ONE forward conversion
+gate = rns_chain_linear(xa, wg)                    # residue-in, float out
+up = rns_chain_linear(xa, wu, emit="residues")     # stays in the domain
+gq, sg = quantize_int8(jax.nn.silu(gate), axis=-1)
+y_chain = rns_chain_linear(up, wd, gate=gq, gate_scale=sg)  # ONE MRC exit
+print(f"chained GLU MLP through basis {chain_basis.moduli}: out "
+      f"{y_chain.shape} — one activation encode, one reverse conversion "
+      f"(config: rns-smollm-135m-resident, linear_domain='residue')")

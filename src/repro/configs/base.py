@@ -82,6 +82,12 @@ class ModelConfig:
     # then performs zero weight quantizations / forward conversions per
     # step.  Only meaningful with an rns_int8 linear_backend.
     encode_weights: bool = False
+    # "float" | "residue": residue-domain activation residency (DESIGN.md
+    # §14) — back-to-back linear chains (GLU MLP, stacked QKV) hand residues
+    # between megakernel launches, one activation forward conversion and one
+    # MRC exit per chain.  Requires encode_weights=True (the MLP weights are
+    # encoded in the chain basis at load time).
+    linear_domain: str = "float"
     param_dtype: str = "bfloat16"
     remat: bool = True
     remat_policy: str = "full"   # full | save_ar (keep TP-AR outputs) | none
@@ -112,6 +118,8 @@ class ModelConfig:
         spec = LinearSpec.parse(self.linear_backend)
         if self.encode_weights:
             spec = _dc.replace(spec, encode_weights=True)
+        if self.linear_domain != "float":
+            spec = _dc.replace(spec, domain=self.linear_domain)
         return spec
 
     @property

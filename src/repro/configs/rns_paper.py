@@ -73,7 +73,30 @@ def smoke_encoded() -> ModelConfig:
                                encode_weights=True)
 
 
+def full_resident() -> ModelConfig:
+    """The fused cell with residue-domain activation residency (DESIGN.md
+    §14): the GLU MLP chains up-proj → in-domain gate → down-proj through
+    the megakernel without leaving the RNS domain (one activation forward
+    conversion + one MRC exit per chain), and QKV projects as one stacked
+    launch.  The megakernel backend is pinned so the chain runs the
+    residue-in/emit kernel variants on every platform (interpret off-TPU)."""
+    return dataclasses.replace(smollm_135m.full(),
+                               name="rns-smollm-135m-resident",
+                               linear_backend="rns_int8:pallas_fused",
+                               encode_weights=True,
+                               linear_domain="residue")
+
+
+def smoke_resident() -> ModelConfig:
+    return dataclasses.replace(smollm_135m.smoke(),
+                               name="rns-smollm-smoke-resident",
+                               linear_backend="rns_int8:pallas_fused",
+                               encode_weights=True,
+                               linear_domain="residue")
+
+
 register("rns-smollm-135m", full, smoke)
 register("rns-smollm-135m-pallas", full_pallas, smoke_pallas)
 register("rns-smollm-135m-encoded", full_encoded, smoke_encoded)
 register("rns-smollm-135m-fused", full_fused, smoke_fused)
+register("rns-smollm-135m-resident", full_resident, smoke_resident)

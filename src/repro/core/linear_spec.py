@@ -19,7 +19,14 @@ independent choices (DESIGN.md §12):
   * ``encode_weights``  — encode the static weight pytree to residues ONCE at
                           load time (`core/rns_tensor.encode_params`), so the
                           hot path performs zero weight quantizations and
-                          zero weight forward conversions per call.
+                          zero weight forward conversions per call;
+  * ``domain``          — "float" (each linear converts in and out of the
+                          domain) or "residue" (DESIGN.md §14: back-to-back
+                          linear chains — the GLU MLP, stacked QKV — hand
+                          residues directly between megakernel launches, one
+                          activation forward conversion and one MRC exit per
+                          chain).  Residue residency requires the rns mode
+                          with pre-encoded weights.
 
 Specs are frozen dataclasses: hashable (they ride through ``jax.jit`` static
 arguments), comparable, and resolved once per distinct config string via the
@@ -47,6 +54,7 @@ class LinearSpec:
     backend: str = "auto"          # auto|jnp|pallas|pallas_fused (rns only)
     broadcast: bool = True         # broadcast-operand vs per-channel datapath
     encode_weights: bool = False   # weights pre-encoded to residues at load
+    domain: str = "float"          # float | residue (chained activations)
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -55,6 +63,15 @@ class LinearSpec:
         if self.backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {self.backend!r}")
+        if self.domain not in ("float", "residue"):
+            raise ValueError(f"domain must be 'float' or 'residue', "
+                             f"got {self.domain!r}")
+        if self.domain == "residue" and not (self.is_rns
+                                             and self.encode_weights):
+            raise ValueError(
+                "domain='residue' needs mode='rns_int8' with "
+                "encode_weights=True: residue-resident chains consume "
+                "pre-encoded weights in the chain basis (DESIGN.md §14)")
 
     # ------------------------------------------------------------ builders --
     @classmethod
@@ -82,6 +99,8 @@ class LinearSpec:
             flags.append("broadcast" if self.broadcast else "per-channel")
             if self.encode_weights:
                 flags.append("encoded")
+            if self.domain != "float":
+                flags.append(f"domain={self.domain}")
         inner = (":" + ",".join(flags)) if flags else ""
         return f"LinearSpec({self.mode}{inner})"
 

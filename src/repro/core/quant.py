@@ -21,7 +21,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_int8", "quant_scale", "dequantize", "QMAX"]
+__all__ = ["quantize_int8", "quant_scale", "dequantize", "requant_scale",
+           "QMAX"]
 
 # Symmetric clip point: ±127.  Deliberately NOT 128 — see the module
 # docstring; −128 is admitted from external int8 but never produced here.
@@ -55,3 +56,34 @@ def quantize_int8(x, axis=-1):
 
 def dequantize(q, scale, dtype=jnp.float32):
     return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def requant_const(scale_col, k: int):
+    """Row-independent factor of THE in-domain requantize rule (DESIGN.md
+    §14): c = max(s_w) · K · QMAX.
+
+    A K-deep int8 product is bounded by |Σ q_x·q_w| ≤ K·127², so the
+    column-scaled value t = y_int·s_w[n] satisfies |t| ≤ c·127 — dividing by
+    ``c`` lands every chained product inside the symmetric int8 range by
+    *bound*, not by a data-dependent max (which a tile-local kernel epilogue
+    cannot see).  The price is range utilization: rows far from saturation
+    use fewer of the 8 bits than a per-row `quant_scale` would.
+    """
+    sc = jnp.asarray(scale_col, jnp.float32)
+    return jnp.max(sc) * jnp.float32(float(k) * QMAX)
+
+
+def requant_scale(scale_row, scale_col, k: int):
+    """Dequant scale of an in-domain requantized activation (per row).
+
+    The residue-resident chain (`kernels/rns_fused` ``emit="residues"``)
+    re-quantizes the K-deep integer product as q' = clip(round(t/c), ±127)
+    with t = y_int·s_w[n] and ``c = requant_const(scale_col, k)``; the value
+    q' then stands for q'·s_req with s_req = s_x·c — this function.  One
+    source for the rule: the kernel epilogue, its jnp twin, and the
+    unchained per-linear reference all derive both factors from here, which
+    is what makes chained-vs-unchained bit-parity provable
+    (`tests/test_chain.py`).
+    """
+    return (jnp.asarray(scale_row, jnp.float32)
+            * requant_const(scale_col, k))

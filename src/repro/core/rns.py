@@ -37,6 +37,7 @@ __all__ = [
     "n8_channels",
     "n11_channels",
     "basis_for_accumulation",
+    "basis_for_chain",
     "basis_for_int8_matmul",
 ]
 
@@ -250,6 +251,23 @@ def basis_for_accumulation(max_abs: int, name: str | None = None,
             return RNSBasis(name=name or f"acc-{max_abs}", moduli=tuple(chosen))
     raise ValueError(
         f"paper n=5 set (M={prod}) cannot cover max_abs={max_abs}")
+
+
+@functools.lru_cache(maxsize=64)
+def basis_for_chain(k: int) -> RNSBasis:
+    """THE basis a residue-resident linear *chain* uses (DESIGN.md §14).
+
+    A chained MLP never leaves the domain between the up-projection and the
+    down-projection, and the down contraction multiplies THREE int8 factors
+    per term (requantized up activation × gate × weight), so the dynamic
+    range must cover K·128³ — 128× the single-linear bound of
+    `basis_for_int8_matmul`.  ``k`` is the widest contraction depth in the
+    chain (d_ff for a GLU MLP); every launch of the chain — the activation
+    encode, gate/up projections, the emitted intermediate, and the gated
+    down projection — shares this ONE basis, which is what lets residues
+    flow between launches without base extension.
+    """
+    return basis_for_accumulation(k * 128 * 128 * 128, name=f"rns-chain-k{k}")
 
 
 @functools.lru_cache(maxsize=64)

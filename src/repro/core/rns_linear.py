@@ -49,12 +49,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import channel_plan as cp
+from . import conversion_plan as _conversion
 from .conversion_plan import ConversionPlan
-from .quant import quant_scale, quantize_int8
+from .quant import QMAX, quant_scale, quantize_int8, requant_const
 from .rns import RNSBasis, basis_for_int8_matmul
 from .rns_tensor import RNSTensor
+from .rns_tensor import encode as _encode_weight
 
-__all__ = ["rns_dense", "rns_int_matmul", "reconstruct_mrc"]
+__all__ = ["rns_dense", "rns_chain_linear", "rns_int_matmul",
+           "reconstruct_mrc"]
 
 # Backwards-compatible alias — the basis rule now lives in `core/rns` so the
 # encode-once layer (`rns_tensor.encode`) and this live path provably share
@@ -145,6 +148,105 @@ def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
                         backend=backend, interpret=interpret, plan=plan)
     return conv.reverse(res, backend=backend, interpret=interpret,
                         scale=scale)
+
+
+# ------------------------------------------------ residue-resident chain ---
+def rns_chain_linear(x, w, *, gate=None, gate_scale=None, scale_row=None,
+                     emit: str = "float", backend: str = "auto",
+                     interpret: bool | None = None):
+    """One launch of a residue-resident linear chain (DESIGN.md §14).
+
+    ``x`` is an *activation* :class:`RNSTensor` ((C, M, K) residues + per-row
+    scale, from `rns_tensor.encode_activation` or a previous
+    ``emit="residues"`` launch): Stage ② does not run — the launch consumes
+    residues directly.  ``w`` is a weight RNSTensor in the SAME basis (the
+    chain's, `rns.basis_for_chain`) or a raw float (K, N) weight encoded
+    live into ``x.basis``.  Forward-only: this is the serving datapath —
+    training chains go through `rns_dense` per linear.
+
+    ``gate`` fuses an elementwise modular multiply into the prologue — a raw
+    int8 (M, K) factor (e.g. the re-quantized activated gate branch of a GLU
+    MLP), applied per channel as |q_x·q_g|_m; its per-row quant scale rides
+    in via ``gate_scale`` and multiplies into the row scale (pinned order:
+    ``(x.scale · gate_scale)``, then the epilogue's ``(y·s_row)·s_col``).
+
+    ``emit="float"`` exits the domain (MRC reverse + dequant, f32 (M, N));
+    ``emit="residues"`` stays inside: the exact integer product is
+    requantized by the shared `quant.requant_const` rule and returned as the
+    next launch's activation RNSTensor — no MRC, no float activation in HBM.
+
+    ``backend``: "pallas_fused" (and "auto" on TPU) runs the residue-in
+    megakernel variants of `kernels/rns_fused`; "jnp"/"pallas" run the
+    staged twin (standalone modmul/matmul/reverse/forward ops) — both
+    bit-identical (`tests/test_chain.py`).
+    """
+    if emit not in ("float", "residues"):
+        raise ValueError(f"emit must be 'float' or 'residues', got {emit!r}")
+    if not isinstance(x, RNSTensor):
+        raise ValueError("rns_chain_linear consumes an activation RNSTensor; "
+                         "enter the chain via rns_tensor.encode_activation")
+    if x.residues.ndim != 3:
+        raise ValueError(f"chain activations are unbatched (C, M, K) "
+                         f"residues, got {x.residues.shape}")
+    if gate is not None and emit == "residues":
+        raise ValueError("gate= with emit='residues' is unsupported: the "
+                         "requantize bound is sized for K·127², not the "
+                         "gated K·127³ product")
+    basis = x.basis
+    if isinstance(w, RNSTensor):
+        if tuple(w.moduli) != tuple(x.moduli):
+            raise ValueError(f"weight channels {w.moduli} do not match the "
+                             f"chain basis {x.moduli}; encode the chain's "
+                             "weights with group_basis/basis_for_chain")
+        wt = w
+    else:
+        wt = _encode_weight(w, basis, backend=backend, interpret=interpret)
+    if wt.scale is None:
+        raise ValueError("rns_chain_linear needs a dequant scale on the "
+                         "encoded weight (from_int8 tensors carry none)")
+
+    M, K = x.shape[-2], x.shape[-1]
+    N = wt.shape[-1]
+    srow = (jnp.asarray(x.scale, jnp.float32)
+            if scale_row is None else jnp.asarray(scale_row, jnp.float32))
+    srow = srow.reshape(M, 1)
+    if gate_scale is not None:
+        if gate is None:
+            raise ValueError("gate_scale= without gate=")
+        srow = srow * jnp.asarray(gate_scale, jnp.float32).reshape(M, 1)
+
+    if cp.resolve_pipeline_backend(backend) == "pallas_fused":
+        from repro.kernels.rns_fused import rns_fused_matmul
+
+        return rns_fused_matmul(x, wt, gate=gate, emit=emit, scale_row=srow,
+                                scale_col=wt.scale, interpret=interpret)
+
+    # Staged twin: the same pipeline as standalone ops (bit-identical — the
+    # megakernel replays exactly these op sequences per tile).
+    moduli = tuple(int(m) for m in basis.moduli)
+    conv = ConversionPlan.for_basis(basis)
+    plan = cp.ChannelPlan.for_matmul(moduli, K, signed=False)  # canonical ops
+    x_res = x.residues.astype(plan.residue_dtype)
+    if gate is not None:
+        g_res = _conversion.forward(jnp.asarray(gate), moduli,
+                                    backend=backend, interpret=interpret,
+                                    dtype=plan.residue_dtype)
+        x_res = cp.modmul(x_res, g_res, moduli, backend=backend,
+                          interpret=interpret).astype(plan.residue_dtype)
+    w_res = wt.residues.astype(plan.residue_dtype)
+    res = cp.matmul(x_res, w_res, moduli, backend=backend,
+                    interpret=interpret, plan=plan)
+    val = conv.reverse(res, backend=backend, interpret=interpret)
+    scol = jnp.asarray(wt.scale, jnp.float32).reshape(1, N)
+    if emit == "residues":
+        creq = requant_const(scol, K)
+        q = jnp.clip(jnp.round((val * scol) / creq), -QMAX, QMAX)
+        res_out = _conversion.forward(q.astype(jnp.int32), moduli,
+                                      backend=backend, interpret=interpret,
+                                      dtype=plan.residue_dtype)
+        return RNSTensor(residues=res_out, scale=srow * creq, basis=basis,
+                         bound=127, signed=True)
+    return (val * srow) * scol
 
 
 # ------------------------------------------------------- live (QAT) path ---

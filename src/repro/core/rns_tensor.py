@@ -38,13 +38,15 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import conversion_plan as _conversion
 from .channel_plan import residue_dtype_for
 from .conversion_plan import ConversionPlan
 from .conversion_plan import forward as _forward_convert
 from .quant import quantize_int8
 from .rns import RNSBasis, basis_for_int8_matmul
 
-__all__ = ["RNSTensor", "encode", "encode_params", "ENCODED_LINEAR_LEAVES"]
+__all__ = ["RNSTensor", "encode", "encode_activation", "encode_params",
+           "ENCODED_LINEAR_LEAVES"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -176,6 +178,38 @@ def encode(w, basis: RNSBasis | None = None, *, backend: str = "auto",
                      signed=True)
 
 
+def encode_activation(x, basis: RNSBasis, *, backend: str = "auto",
+                      interpret: Optional[bool] = None) -> RNSTensor:
+    """Quantize + forward-convert a float *activation* (…, M, K) ONCE.
+
+    The entry gate of a residue-resident linear chain (DESIGN.md §14): the
+    activation pays Stage ② exactly once here and every launch of the chain
+    then consumes the residues directly (`rns_linear.rns_chain_linear`).
+    Unlike weights, activations quantize per ROW (axis −1, the contraction
+    axis of x @ w), so the carried ``scale`` is (…, M, 1) — the row operand
+    of the fused dequant/requantize epilogues — not the (…, 1, N) column
+    scale a weight :class:`RNSTensor` holds.
+
+    ``basis`` is mandatory: a chain's basis is sized for the *whole* chain
+    (`rns.basis_for_chain`), not for this tensor's own K, and every operand
+    in the chain must share it.  The forward converter goes through the
+    late-bound `conversion_plan.forward` dispatcher, so the one standalone
+    conversion per chain is countable/spy-able (tests) and runs the Pallas
+    `rns_convert` kernel under a pallas backend.
+    """
+    x = jnp.asarray(x)
+    if x.ndim < 2:
+        raise ValueError(
+            f"encode_activation expects (..., M, K) activations, got {x.shape}")
+    moduli = tuple(int(m) for m in basis.moduli)
+    xq, sx = quantize_int8(x, axis=-1)
+    res = _conversion.forward(xq, moduli, backend=backend,
+                              interpret=interpret,
+                              dtype=residue_dtype_for(moduli))
+    return RNSTensor(residues=jnp.moveaxis(res, 0, -3), scale=sx,
+                     basis=basis, bound=127, signed=True)
+
+
 # Which weight leaves the `models.layers.linear` datapath consumes, keyed by
 # their parent dict: exactly these are encoded by `encode_params`.  Everything
 # else (embeddings, norms, routed MoE expert banks, SSM projections — all
@@ -188,7 +222,8 @@ ENCODED_LINEAR_LEAVES: Dict[str, Tuple[str, ...]] = {
 
 
 def encode_params(params, basis: RNSBasis | None = None, *,
-                  backend: str = "auto", interpret: Optional[bool] = None):
+                  backend: str = "auto", interpret: Optional[bool] = None,
+                  group_basis: Optional[Dict[str, RNSBasis]] = None):
     """Encode a model parameter pytree's linear weights to residues ONCE.
 
     Walks the (nested-dict) parameter tree and replaces exactly the leaves
@@ -200,6 +235,11 @@ def encode_params(params, basis: RNSBasis | None = None, *,
     :class:`~repro.core.linear_spec.LinearSpec` has ``encode_weights=True``:
     decode then performs ZERO weight quantizations and ZERO weight forward
     conversions inside the scan.
+
+    ``group_basis`` overrides the basis per parent group (e.g.
+    ``{"mlp": basis_for_chain(d_ff)}``): a residue-resident chain needs
+    every weight it touches in the chain's own basis (DESIGN.md §14), while
+    the remaining groups keep ``basis`` (or the per-K default).
     """
     def walk(node):
         if not isinstance(node, dict):
@@ -208,11 +248,12 @@ def encode_params(params, basis: RNSBasis | None = None, *,
         for k, v in node.items():
             leaves = ENCODED_LINEAR_LEAVES.get(k)
             if leaves is not None and isinstance(v, dict):
+                b = (group_basis or {}).get(k, basis)
                 out[k] = {
                     # already-encoded leaves pass through: encode_params is
                     # idempotent, so re-wrapping an encoded Engine's params
                     # (or an encoded-checkpoint round-trip) is safe.
-                    kk: (encode(vv, basis, backend=backend,
+                    kk: (encode(vv, b, backend=backend,
                                 interpret=interpret)
                          if kk in leaves
                          and not isinstance(vv, (dict, RNSTensor))

@@ -22,6 +22,7 @@ __all__ = [
     "channel_schedules",
     "rns_matmul_ref",
     "rns_fused_matmul_ref",
+    "rns_fused_chain_ref",
     "rns_modmul_ref",
     "rns_forward_ref",
     "rns_reverse_ref",
@@ -80,6 +81,64 @@ def rns_fused_matmul_ref(xq, wq, basis, *, scale=None):
         res = cp.matmul_broadcast(xq, wq, basis.moduli, backend="jnp")
     return ConversionPlan.for_basis(basis).reverse(res, backend="jnp",
                                                    scale=scale)
+
+
+def rns_fused_chain_ref(x, w_gate, w_up, w_down, basis, *, act=jax.nn.silu):
+    """Oracle for a residue-resident GLU-MLP chain (DESIGN.md §14): the
+    UNCHAINED per-linear staged composition under the shared requantize rule.
+
+    Every linear runs as standalone jnp ops — quantize, forward conversion,
+    canonical channel matmul, MRC reverse — and the up-projection exit
+    applies exactly the `quant.requant_const` round/clip the chained
+    kernel's ``emit="residues"`` epilogue applies, so the chained path
+    (one activation forward conversion, one MRC exit) must agree bit-for-bit
+    (`tests/test_chain.py`).  ``x`` is the float (M, K) block entering the
+    MLP; weights are raw float (K, F)/(K, F)/(F, N) or RNSTensors already in
+    ``basis`` (the chain basis — `rns.basis_for_chain(F)`).
+    """
+    from repro.core import channel_plan as cp
+    from repro.core.quant import QMAX, quantize_int8, requant_const
+    from repro.core.rns_tensor import RNSTensor, encode
+
+    moduli = tuple(int(m) for m in basis.moduli)
+    conv = ConversionPlan.for_basis(basis)
+
+    def enc(w):
+        return w if isinstance(w, RNSTensor) else encode(w, basis)
+
+    wg, wu, wd = enc(w_gate), enc(w_up), enc(w_down)
+    K, F = x.shape[-1], wu.shape[-1]
+    plan_k = ChannelPlan.for_matmul(moduli, K, signed=False)
+    plan_f = ChannelPlan.for_matmul(moduli, F, signed=False)
+
+    # chain entry: the one activation quantize + forward conversion
+    xq, sx = quantize_int8(x, axis=-1)
+    x_res = _forward_convert(xq, moduli, backend="jnp",
+                             dtype=plan_k.residue_dtype)
+
+    def matmul(a_res, wt, plan):
+        res = cp.matmul(a_res, wt.residues.astype(plan.residue_dtype),
+                        moduli, backend="jnp", plan=plan)
+        return conv.reverse(res, backend="jnp")
+
+    # gate branch: float exit (its own domain boundary), activation, requant
+    y_gate = (matmul(x_res, wg, plan_k) * sx) * wg.scale
+    gq, sg = quantize_int8(act(y_gate), axis=-1)
+
+    # up-projection exit: the shared in-domain requantize rule
+    creq = requant_const(wu.scale, K)
+    t = matmul(x_res, wu, plan_k) * wu.scale
+    q_up = jnp.clip(jnp.round(t / creq), -QMAX, QMAX)
+    s_up = sx * creq
+
+    # down-projection: gated canonical product, MRC exit, pinned scale order
+    u_res = _forward_convert(q_up.astype(jnp.int32), moduli, backend="jnp",
+                             dtype=plan_f.residue_dtype)
+    g_res = _forward_convert(gq, moduli, backend="jnp",
+                             dtype=plan_f.residue_dtype)
+    a_res = cp.modmul(u_res, g_res, moduli,
+                      backend="jnp").astype(plan_f.residue_dtype)
+    return (matmul(a_res, wd, plan_f) * (s_up * sg)) * wd.scale
 
 
 def rns_modmul_ref(a_res, b_res, moduli: Sequence[int]):

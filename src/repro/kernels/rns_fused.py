@@ -70,14 +70,17 @@ __all__ = ["rns_fused_matmul"]
 
 
 def _kernel(sched_ref, mods_ref, inv_ref, *refs, plan: ChannelPlan,
-            conv: ConversionPlan, nk: int, quantize: bool, has_srow: bool,
-            has_scol: bool, has_scale: bool, encoded: bool):
+            conv: ConversionPlan, nk: int, quantize: bool, residue_in: bool,
+            has_gate: bool, emit: bool, has_srow: bool, has_scol: bool,
+            has_scale: bool, encoded: bool):
     rest = list(refs)
     x_ref = rest.pop(0)
     srow_ref = rest.pop(0) if has_srow else None
+    gate_ref = rest.pop(0) if has_gate else None
     w_ref = rest.pop(0)
     scol_ref = rest.pop(0) if has_scol else None
     scale_ref = rest.pop(0) if has_scale else None
+    creq_ref = rest.pop(0) if emit else None
     o_ref, acc_ref = rest
     C = plan.k
     k_step = pl.program_id(2)
@@ -89,26 +92,44 @@ def _kernel(sched_ref, mods_ref, inv_ref, *refs, plan: ChannelPlan,
     # Stage ② activations: the quantizer's exact round/clip formula
     # (core/quant.py) on the raw block — the int8 activation tensor is never
     # materialized in HBM.  Padding rows divide by a 1.0 pad scale (never 0).
+    # Residue-in activations (the chained datapath, DESIGN.md §14) skip
+    # Stage ② entirely: the operand already IS the (C, bm, bk) canonical
+    # residue stack of an activation RNSTensor, sliced per channel below.
     if quantize:
         a = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32)
                                / srow_ref[...]), -QMAX, QMAX)
         a = a.astype(jnp.int8)
+    elif residue_in:
+        a = None
     else:
         a = x_ref[...]
-    if plan.residue_dtype != jnp.int8:
+    if a is not None and plan.residue_dtype != jnp.int8:
         a = a.astype(plan.residue_dtype)     # wide-residue bases (m > 128)
 
     # Stage ② weights + Stage ③: per-channel forward conversion (live int8
     # weights) feeding the MXU contraction — no reduction inside the K loop.
     # Pre-encoded residues skip the mod entirely (the encode-once datapath).
     for c in range(C):
+        if residue_in:
+            ac = x_ref[c, :, :]
+            if has_gate:
+                # The gate's per-channel modular multiply, fused into the
+                # prologue: |q_u·q_g|_m from the raw int8 gate block — both
+                # factors < m ≤ 2^15, the product < 2^30, so one direct
+                # floored mod is int32-exact and equals `channel_plan.modmul`
+                # canonically (integer identity, tests/test_chain.py).
+                g = jnp.mod(gate_ref[...].astype(jnp.int32), mods_ref[c])
+                ac = jnp.mod(ac.astype(jnp.int32) * g,
+                             mods_ref[c]).astype(plan.residue_dtype)
+        else:
+            ac = a
         if encoded:
             b = w_ref[c, :, :]
         else:
             b = jnp.mod(w_ref[...].astype(jnp.int32),
                         mods_ref[c]).astype(plan.residue_dtype)
         acc_ref[c, :, :] = acc_ref[c, :, :] + jax.lax.dot_general(
-            a, b, (((1,), (0,)), ((), ())),
+            ac, b, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32)
 
     @pl.when(k_step == nk - 1)
@@ -151,6 +172,25 @@ def _kernel(sched_ref, mods_ref, inv_ref, *refs, plan: ChannelPlan,
         neg = mw.limbs_to_float(mw.limbs_const_minus(conv.M, acc))
         val = jnp.where(is_neg, -neg, pos)
 
+        if emit:
+            # In-domain requantize (DESIGN.md §14): scale the exact integer
+            # product back into ±127 by BOUND — q' = clip(round(t/c), ±QMAX)
+            # with t = y·s_col and c = requant_const(s_col, K) streamed as an
+            # SMEM scalar (|t| ≤ c·127, so the clip never loses information)
+            # — then re-encode the canonical residues per channel.  The
+            # activation never leaves the domain in HBM: the output block IS
+            # the next launch's residue operand, and its (M, 1) dequant
+            # scale s_row·c is reconstructed outside from the same values
+            # (`quant.requant_scale` — one source, bit-matched to the
+            # dequant→requantize the unchained reference replays).
+            t = val * scol_ref[...]
+            q = jnp.clip(jnp.round(t / creq_ref[0]), -QMAX, QMAX)
+            q32 = q.astype(jnp.int32)
+            for j in range(C):
+                o_ref[j, :, :] = jnp.mod(q32, mods_ref[j]).astype(
+                    plan.residue_dtype)
+            return
+
         # Fused dequant.  Order matters for bit-parity: (y · s_row) · s_col
         # is the seed-golden-pinned sequence of the staged rns_dense
         # epilogue; a generic `scale` replays `reverse(scale=...)`'s single
@@ -166,22 +206,28 @@ def _kernel(sched_ref, mods_ref, inv_ref, *refs, plan: ChannelPlan,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("plan", "conv", "quantize", "has_srow",
-                              "has_scol", "has_scale", "encoded", "bm", "bn",
-                              "bk", "interpret"))
-def _fused_call(x, srow, w, scol, scale, *, plan: ChannelPlan,
-                conv: ConversionPlan, quantize: bool, has_srow: bool,
+    jax.jit, static_argnames=("plan", "conv", "quantize", "residue_in",
+                              "has_gate", "emit", "has_srow", "has_scol",
+                              "has_scale", "encoded", "bm", "bn", "bk",
+                              "interpret"))
+def _fused_call(x, srow, gate, w, scol, scale, creq, *, plan: ChannelPlan,
+                conv: ConversionPlan, quantize: bool, residue_in: bool,
+                has_gate: bool, emit: bool, has_srow: bool,
                 has_scol: bool, has_scale: bool, encoded: bool, bm: int,
                 bn: int, bk: int, interpret: bool):
     C = plan.k
-    M, K = x.shape
+    M, K = x.shape[-2], x.shape[-1]
     N = w.shape[-1]
     pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
     if pm or pk:
-        x = jnp.pad(x, ((0, pm), (0, pk)))
+        # pad residues/gate with 0 — the canonical residue of 0, inert in
+        # the contraction and under the gate's modular multiply
+        x = jnp.pad(x, ((0, 0),) * (x.ndim - 2) + ((0, pm), (0, pk)))
     if has_srow and pm:
         # pad rows quantize as 0/1.0 = 0 — never a 0/0 NaN lane
         srow = jnp.pad(srow, ((0, pm), (0, 0)), constant_values=1.0)
+    if has_gate and (pm or pk):
+        gate = jnp.pad(gate, ((0, pm), (0, pk)))
     if pk or pn:
         w = jnp.pad(w, ((0, 0),) * (w.ndim - 2) + ((0, pk), (0, pn)))
     if has_scol and pn:
@@ -198,13 +244,20 @@ def _fused_call(x, srow, w, scol, scale, *, plan: ChannelPlan,
         pl.BlockSpec((C,), lambda i, j, k: (0,), memory_space=pltpu.SMEM),
         pl.BlockSpec((C, C), lambda i, j, k: (0, 0),
                      memory_space=pltpu.SMEM),
-        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
     ]
     args = [jnp.asarray(plan.sched), jnp.asarray(plan.mods),
-            jnp.asarray(conv.inv), x]
+            jnp.asarray(conv.inv)]
+    if residue_in:
+        in_specs.append(pl.BlockSpec((C, bm, bk), lambda i, j, k: (0, i, k)))
+    else:
+        in_specs.append(pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)))
+    args.append(x)
     if has_srow:
         in_specs.append(pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)))
         args.append(srow)
+    if has_gate:
+        in_specs.append(pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)))
+        args.append(gate)
     if encoded:
         in_specs.append(pl.BlockSpec((C, bk, bn), lambda i, j, k: (0, k, j)))
     else:
@@ -216,26 +269,38 @@ def _fused_call(x, srow, w, scol, scale, *, plan: ChannelPlan,
     if has_scale:
         in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
         args.append(scale)
+    if emit:
+        in_specs.append(pl.BlockSpec((1,), lambda i, j, k: (0,),
+                                     memory_space=pltpu.SMEM))
+        args.append(creq)
 
+    if emit:
+        out_spec = pl.BlockSpec((C, bm, bn), lambda i, j, k: (0, i, j))
+        out_shape = jax.ShapeDtypeStruct((C, Mp, Np), plan.residue_dtype)
+    else:
+        out_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+        out_shape = jax.ShapeDtypeStruct((Mp, Np), jnp.float32)
     out = pl.pallas_call(
         functools.partial(_kernel, plan=plan, conv=conv, nk=nk,
-                          quantize=quantize, has_srow=has_srow,
+                          quantize=quantize, residue_in=residue_in,
+                          has_gate=has_gate, emit=emit, has_srow=has_srow,
                           has_scol=has_scol, has_scale=has_scale,
                           encoded=encoded),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        out_specs=out_spec,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((C, bm, bn), jnp.int32)],
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel",
                                  "arbitrary")) if not interpret else None,
         interpret=interpret,
     )(*args)
-    return out[:M, :N]
+    return out[:, :M, :N] if emit else out[:M, :N]
 
 
 def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
+                     gate=None, emit: str = "float",
                      scale_row=None, scale_col=None, scale=None,
                      block_m: int | None = None, block_n: int | None = None,
                      block_k: int | None = None,
@@ -246,13 +311,24 @@ def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
     datapath — every channel's dot streams the same block), or, with
     ``quantize=True``, the raw float activations plus their per-row quant
     scale ``scale_row`` (the `rns_dense` datapath: round/clip/cast run
-    per VMEM block and the scale is re-used for the dequant epilogue).
+    per VMEM block and the scale is re-used for the dequant epilogue), or
+    an *activation* :class:`~repro.core.rns_tensor.RNSTensor` (residues
+    (C, M, K)) — the residue-in chained datapath (DESIGN.md §14): Stage ②
+    is skipped entirely and ``scale_row`` defaults to the carried scale.
+    Residue-in launches may fuse an elementwise modular ``gate`` — a raw
+    (M, K) int8 gate factor multiplied per channel in the prologue.
 
     ``w`` is the weight operand in any of the three forms the staged
     pipeline accepts: a raw (K, N) int8 matrix (forward-converted to
     residues per block, in VMEM), a pre-encoded
     :class:`~repro.core.rns_tensor.RNSTensor`, or its raw (C, K, N)
     canonical residue stack.
+
+    ``emit`` selects the epilogue: ``"float"`` runs the MRC reverse +
+    dequant and returns a float32 (M, N); ``"residues"`` requantizes the
+    exact integer product in-domain (`quant.requant_const` rule, needs
+    ``scale_row``/``scale_col``) and returns an activation RNSTensor whose
+    (C, M, N) residues feed the next residue-in launch — no MRC exit.
 
     Dequant epilogue (all optional, fused into the kernel): ``scale_row``
     (M, 1) then ``scale_col`` (1, N) — the staged `rns_dense` op order
@@ -266,6 +342,11 @@ def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
     order.
     """
     from . import tune
+    from repro.core.quant import requant_const
+
+    if emit not in ("float", "residues"):
+        raise ValueError(f"emit must be 'float' or 'residues', got {emit!r}")
+    emit_res = emit == "residues"
 
     encoded = isinstance(w, RNSTensor)
     if encoded:
@@ -282,7 +363,40 @@ def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
         w_arr = w.residues
     else:
         w_arr = w
-    M, K = x.shape
+
+    residue_in = isinstance(x, RNSTensor)
+    if residue_in:
+        if x.residues.ndim != 3:
+            raise ValueError("rns_fused_matmul needs an unbatched (C, M, K) "
+                             f"activation RNSTensor, got {x.residues.shape}")
+        if quantize:
+            raise ValueError("quantize=True is the float-activation prologue;"
+                             " a residue-in RNSTensor is already quantized")
+        if x.bound > 128:
+            raise ValueError(f"activation bound {x.bound} exceeds the int8 "
+                             "operand range the basis is sized for")
+        if basis is not None and tuple(basis.moduli) != x.moduli:
+            raise ValueError(f"basis {basis.moduli} does not match activation "
+                             f"channels {x.moduli}")
+        basis = x.basis
+        x_arr = x.residues
+        if scale_row is None:
+            scale_row = x.scale
+    else:
+        x_arr = x
+    if gate is not None:
+        if not residue_in:
+            raise ValueError("gate= fuses into the residue-in prologue; "
+                             "float/int8 activations gate before quantize")
+        gate = jnp.asarray(gate)
+        if gate.shape != x_arr.shape[-2:]:
+            raise ValueError(f"gate {gate.shape} must match the (M, K) "
+                             f"activation block {x_arr.shape[-2:]}")
+        if emit_res:
+            raise ValueError("gate= with emit='residues' is unsupported: the "
+                             "requantize bound is sized for K·127², not the "
+                             "gated K·127³ product")
+    M, K = x_arr.shape[-2], x_arr.shape[-1]
     if basis is None:
         if w_arr.ndim == 3:
             raise ValueError("raw (C, K, N) residues need an explicit basis")
@@ -294,26 +408,45 @@ def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
             f"moduli {moduli} exceed the int32 limb-Horner bound "
             f"m <= {mw.MAX_HORNER_MODULUS}; the fused kernel cannot host "
             "this basis")
-    plan = ChannelPlan.for_matmul(moduli, K, signed=True)
+    # Residue-in operands are CANONICAL (both factors in [0, m)), so the fold
+    # plan is unsigned — K·(m−1)² per-channel bound instead of the signed
+    # broadcast-operand K·128·(m−1) bound.
+    plan = ChannelPlan.for_matmul(moduli, K, signed=not residue_in)
     if w_arr.ndim == 3:
         if w_arr.shape[0] != plan.k:
             raise ValueError(f"residue stack has {w_arr.shape[0]} channels, "
                              f"basis has {plan.k}")
         encoded = True
         w_arr = w_arr.astype(plan.residue_dtype)     # no-op by the dtype rule
+    if residue_in:
+        x_arr = x_arr.astype(plan.residue_dtype)
     if quantize and scale_row is None:
         raise ValueError("quantize=True needs the per-row quant scale_row")
-    if scale_row is not None and not quantize:
+    if scale_row is not None and not (quantize or residue_in or emit_res):
         raise ValueError("scale_row is the quantize-mode row scale; int8 "
                          "inputs fuse dequant via scale= instead")
     if scale is not None and (scale_row is not None or scale_col is not None):
         raise ValueError("pass either scale or scale_row/scale_col, not both")
+    if emit_res:
+        if scale_col is None:
+            raise ValueError("emit='residues' needs scale_col: the in-domain "
+                             "requantize constant is max(scale_col)·K·127")
+        if scale_row is None:
+            raise ValueError("emit='residues' needs scale_row (or a carried "
+                             "activation scale) to form the output scale")
+        if scale is not None:
+            raise ValueError("emit='residues' uses scale_row/scale_col; "
+                             "generic scale= has no in-domain meaning")
     N = w_arr.shape[-1]
 
     interpret = resolve_interpret(interpret)
+    variant = ("pallas_fused" + ("_res" if residue_in else "")
+               + ("_emit" if emit_res else ""))
     if block_m is None or block_n is None or block_k is None:
         tbm, tbn, tbk = tune.blocks_for(M, K, N, plan.k,
                                         dtype=str(w_arr.dtype),
+                                        backend=variant,
+                                        x_channels=residue_in, emit=emit_res,
                                         interpret=interpret)
         block_m, block_n, block_k = (block_m or tbm, block_n or tbn,
                                      block_k or tbk)
@@ -342,8 +475,24 @@ def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
             srow = jnp.broadcast_to(s2, (M, 1))
         else:
             sc = jnp.broadcast_to(s2, (M, N))
-    return _fused_call(x, srow, w_arr, scol, sc, plan=plan, conv=conv,
-                       quantize=quantize, has_srow=srow is not None,
-                       has_scol=scol is not None, has_scale=sc is not None,
-                       encoded=encoded, bm=bm, bn=bn, bk=bk,
-                       interpret=interpret)
+
+    creq = out_scale = None
+    if emit_res:
+        creq = requant_const(scale_col, K)
+        # The output scale is formed OUTSIDE the kernel from the same values
+        # the epilogue divides by — `quant.requant_scale(srow, scol, K)`
+        # spelled on the already-reshaped operands (same float ops, one rule).
+        out_scale = srow * creq
+    kernel_srow = srow if (quantize or not emit_res) else None
+    out = _fused_call(x_arr, kernel_srow, gate, w_arr, scol, sc,
+                      creq.reshape(1) if creq is not None else None,
+                      plan=plan, conv=conv, quantize=quantize,
+                      residue_in=residue_in, has_gate=gate is not None,
+                      emit=emit_res, has_srow=kernel_srow is not None,
+                      has_scol=scol is not None, has_scale=sc is not None,
+                      encoded=encoded, bm=bm, bn=bn, bk=bk,
+                      interpret=interpret)
+    if emit_res:
+        return RNSTensor(residues=out, scale=out_scale, basis=basis,
+                         bound=127, signed=True)
+    return out

@@ -30,8 +30,8 @@ import os
 from pathlib import Path
 from typing import Callable, Optional, Sequence, Tuple
 
-__all__ = ["DEFAULT_BLOCKS", "CANDIDATES", "blocks_for", "cache_path",
-           "clear_memory_cache", "vmem_footprint"]
+__all__ = ["DEFAULT_BLOCKS", "CANDIDATES", "DECODE_CANDIDATES", "blocks_for",
+           "cache_path", "clear_memory_cache", "vmem_footprint"]
 
 Blocks = Tuple[int, int, int]
 
@@ -50,6 +50,22 @@ CANDIDATES: Tuple[Blocks, ...] = (
     (128, 128, 256),
     (64, 128, 512),
     (128, 64, 512),
+)
+
+# Decode-shape candidates: M is the batch size (a handful of rows per token
+# step), so a 128-row bm pads 8–16× dead sublanes per tile.  Small-bm tilings
+# keep the grid's M extent at 1 while still streaming MXU-aligned bn/bk —
+# `blocks_for` switches to this pool automatically for M ≤ 64 so chained
+# decode never falls back to the 128×128×512 static block.
+DECODE_CANDIDATES: Tuple[Blocks, ...] = (
+    (8, 128, 512),
+    (8, 256, 512),
+    (16, 128, 512),
+    (16, 256, 256),
+    (32, 128, 512),
+    (32, 256, 512),
+    (64, 128, 512),
+    (64, 256, 256),
 )
 
 # VMEM budget the candidate filter admits against (per-core VMEM is ~16 MiB;
@@ -73,14 +89,19 @@ def clear_memory_cache() -> None:
 
 
 def vmem_footprint(blocks: Blocks, C: int, *, itemsize: int = 1,
-                   encoded: bool = True) -> int:
+                   encoded: bool = True, x_channels: bool = False,
+                   emit: bool = False) -> int:
     """Approximate per-step VMEM bytes of the fused kernel at this tiling:
-    activation block + weight block(s) + the (C, bm, bn) int32 accumulator
-    scratch + the f32 output tile."""
+    activation block(s) + weight block(s) + the (C, bm, bn) int32 accumulator
+    scratch + the output tile.  ``x_channels`` sizes a residue-in activation
+    (the (C, bm, bk) stack of a chained launch); ``emit`` sizes the
+    (C, bm, bn) residue output tile instead of the f32 one."""
     bm, bn, bk = blocks
     w_blocks = C if encoded else 1
-    return (bm * bk * itemsize + w_blocks * bk * bn * itemsize
-            + C * bm * bn * 4 + bm * bn * 4)
+    x_blocks = C if x_channels else 1
+    out_bytes = C * bm * bn * itemsize if emit else bm * bn * 4
+    return (x_blocks * bm * bk * itemsize + w_blocks * bk * bn * itemsize
+            + C * bm * bn * 4 + out_bytes)
 
 
 def _clip(blocks: Blocks, M: int, K: int, N: int) -> Blocks:
@@ -157,6 +178,7 @@ def _default_sweep(M: int, K: int, N: int, C: int) -> Callable[[Blocks],
 
 def blocks_for(M: int, K: int, N: int, C: int, *, dtype: str = "int8",
                backend: str = "pallas_fused", interpret: bool | None = None,
+               x_channels: bool = False, emit: bool = False,
                sweep: Optional[Callable[[Blocks], float]] = None,
                candidates: Optional[Sequence[Blocks]] = None,
                persist: bool = True) -> Blocks:
@@ -165,7 +187,11 @@ def blocks_for(M: int, K: int, N: int, C: int, *, dtype: str = "int8",
     Table hit → the cached choice.  Miss on device (or with an injected
     ``sweep``) → sweep the VMEM-admissible candidates, persist the winner.
     Miss under interpret with no injected sweep → the static fallback
-    (clipped), *without* writing the table.
+    (clipped), *without* writing the table.  ``backend`` distinguishes the
+    kernel *variant* ("pallas_fused", "pallas_fused_res",
+    "pallas_fused_res_emit", …) so residue-in/emit launches tune their own
+    table rows; ``x_channels``/``emit`` size the VMEM filter for them.
+    Decode shapes (M ≤ 64) sweep `DECODE_CANDIDATES` by default.
     """
     from repro.core.channel_plan import resolve_interpret
 
@@ -180,8 +206,11 @@ def blocks_for(M: int, K: int, N: int, C: int, *, dtype: str = "int8",
             return _clip(DEFAULT_BLOCKS, M, K, N)
         sweep = _default_sweep(M, K, N, C)
 
-    pool = [tuple(c) for c in (candidates or CANDIDATES)
-            if vmem_footprint(tuple(c), C) <= VMEM_BUDGET_BYTES]
+    if candidates is None:
+        candidates = DECODE_CANDIDATES if M <= 64 else CANDIDATES
+    pool = [tuple(c) for c in candidates
+            if vmem_footprint(tuple(c), C, x_channels=x_channels,
+                              emit=emit) <= VMEM_BUDGET_BYTES]
     if not pool:
         pool = [DEFAULT_BLOCKS]
     # Clipping collapses candidates at small shapes — sweep distinct ones.

@@ -162,6 +162,44 @@ def analytic_cost(cfg: ModelConfig, shape: ShapeConfig, *,
         wconv = 0.0 if spec.encode_weights else (C + 1.0) * w_elems
         flops_int8 += wconv
         bk["flops_weight_conv"] = wconv
+        # Activation conversion work: every `linear`-served matmul quantizes
+        # + forward-converts its input (~(C+1) int ops/elem: one round/clip
+        # plus C mods) and MRC-reverses its int32 accumulator output
+        # (C·(C+1)/2 fold subtract/mod steps + ~3·C scale/round ops per
+        # output element).  Residue-domain residency (spec.domain ==
+        # "residue", DESIGN.md §14) chains back-to-back launches: stacked
+        # QKV encodes x once (3→1 input encodes) and the GLU MLP runs
+        # gate/up/down off a single encode (2→1).  Reverse-side elements are
+        # UNCHANGED by residency: the up-projection's chain exit becomes an
+        # equal-cost in-domain requantize (same per-output fold ladder, the
+        # dequant muls traded for the requant round) — the eliminated work
+        # is exactly the duplicate forward conversions.  SSM projections and
+        # MoE routed experts are einsum-served (no rns datapath), as above.
+        resident = getattr(spec, "domain", "float") == "residue"
+        fwd_el = rev_el = 0.0
+        for layer in range(cfg.num_layers):
+            kind = ("hybrid" if cfg.hybrid
+                    else "ssm" if (cfg.ssm and cfg.attention == "none")
+                    else "attn")
+            if kind in ("attn", "hybrid"):
+                fwd_el += T * d * (1.0 if resident else 3.0)  # q,k,v inputs
+                fwd_el += T * H * dh                          # o-proj input
+                rev_el += T * (H + 2 * Hk) * dh + T * d
+            if cfg.mlp_kind(layer) == "mlp" and f > 0:
+                if cfg.glu:
+                    fwd_el += T * d * (1.0 if resident else 2.0) + T * f
+                    rev_el += 2.0 * T * f + T * d
+                else:
+                    fwd_el += T * d + T * f
+                    rev_el += T * f + T * d
+        n_fwd = 1.0
+        if shape.kind == "train":
+            n_fwd = 2.0 if remat_on else 1.0
+        act_fwd = (C + 1.0) * fwd_el * n_fwd / eff
+        act_rev = (C * (C + 1.0) / 2.0 + 3.0 * C) * rev_el * n_fwd / eff
+        flops_int8 += act_fwd + act_rev
+        bk["flops_act_fwd_conv"] = act_fwd
+        bk["flops_act_rev_conv"] = act_rev
 
     # ---------------- HBM bytes (per device) -------------------------------
     from repro.models.transformer import count_params

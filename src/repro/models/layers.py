@@ -37,11 +37,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.linear_spec import LinearSpec
-from repro.core.rns_linear import rns_dense
-from repro.core.rns_tensor import RNSTensor
+from repro.core.quant import quantize_int8
+from repro.core.rns import basis_for_chain, basis_for_int8_matmul
+from repro.core.rns_linear import rns_chain_linear, rns_dense
+from repro.core.rns_tensor import RNSTensor, encode_activation
 
 __all__ = [
-    "rms_norm", "make_dense_params", "linear",
+    "rms_norm", "make_dense_params", "linear", "linear_qkv", "mlp_chain",
     "rope", "apply_rope", "sinusoidal",
     "attention", "update_cache_full", "update_cache_ring",
 ]
@@ -76,6 +78,100 @@ def linear(x, w, spec="bf16"):
                       broadcast=spec.broadcast)
         return y.reshape(*shp[:-1], w.shape[-1])
     return jnp.einsum("...d,df->...f", x, w)
+
+
+def _chain_basis_of(*ws):
+    """Shared basis of a chain's encoded weights (None for raw weights)."""
+    enc = [w for w in ws if isinstance(w, RNSTensor)]
+    if not enc:
+        return None
+    if len(enc) != len(ws):
+        raise ValueError("a residue-resident chain needs ALL its weights "
+                         "encoded (or none) — mixed raw/RNSTensor weights "
+                         "cannot share the chain basis")
+    b = enc[0].basis
+    for w in enc[1:]:
+        if tuple(w.moduli) != tuple(b.moduli):
+            raise ValueError(
+                f"chain weights encoded in different bases ({b.moduli} vs "
+                f"{w.moduli}); encode them with a shared group_basis "
+                "(rns_tensor.encode_params / rns.basis_for_chain)")
+    return b
+
+
+def mlp_chain(x, w_gate, w_up, w_down, spec, act):
+    """Residue-resident GLU MLP: act(x·Wg) ⊙ (x·Wu) · Wd in ONE domain trip.
+
+    The chained datapath of ``spec.domain == "residue"`` (DESIGN.md §14): the
+    activation enters the RNS domain once (`encode_activation` — the chain's
+    single standalone forward conversion), the gate and up projections run as
+    residue-in megakernel launches, the up exit is the in-domain requantize
+    (``emit="residues"`` — no MRC), and the down projection applies the
+    re-quantized gate by per-channel modular multiply in its prologue, taking
+    the chain's ONE MRC reverse at its float exit.  The gate branch leaves
+    the domain at its own boundary (the nonlinearity is not residue-safe) —
+    that exit replaces the unchained gate linear's, it is not an extra one.
+
+    Bit-identical to the unchained per-linear composition under the shared
+    requantize rule (`kernels/ref.rns_fused_chain_ref`, tests/test_chain.py).
+    Weights are RNSTensors encoded in the chain basis
+    (`rns.basis_for_chain(d_ff)`, via ``encode_params(group_basis=...)``) or
+    raw floats encoded live per call (the reference path).
+    """
+    shp = x.shape
+    xf = x.reshape(-1, shp[-1]).astype(jnp.float32)
+    F = w_down.shape[-2]
+    basis = _chain_basis_of(w_gate, w_up, w_down) or basis_for_chain(F)
+    if basis.M <= 2 * F * 127 ** 3:
+        raise ValueError(
+            f"basis {tuple(basis.moduli)} (M={basis.M}) cannot hold the "
+            f"chained down-projection bound 2·{F}·127³; encode the MLP "
+            "weights in rns.basis_for_chain(d_ff)")
+    xa = encode_activation(xf, basis, backend=spec.backend)
+    gate_f = rns_chain_linear(xa, w_gate, backend=spec.backend)
+    up_rns = rns_chain_linear(xa, w_up, emit="residues", backend=spec.backend)
+    gq, sg = quantize_int8(act(gate_f), axis=-1)
+    o = rns_chain_linear(up_rns, w_down, gate=gq, gate_scale=sg,
+                         backend=spec.backend)
+    return o.reshape(*shp[:-1], o.shape[-1]).astype(x.dtype)
+
+
+def linear_qkv(x, ws, spec):
+    """Stacked Q/K/V projection: one residue-domain launch for all three.
+
+    The chain-detection rule for attention (DESIGN.md §14): the three
+    projections share the activation operand, so under
+    ``spec.domain == "residue"`` they concatenate along the output axis and
+    run as ONE residue-in megakernel launch — one activation forward
+    conversion instead of three.  Bit-identity with three separate linears
+    is structural: per-column weight quantization and the per-output-column
+    epilogue are independent across columns, so concatenation changes
+    nothing but the launch count.  ``ws`` is the (wq, wk, wv) tuple — all
+    RNSTensors in one basis, or all raw floats.  Returns the un-concatenated
+    (q, k, v) with x's leading dims.
+    """
+    shp = x.shape
+    xf = x.reshape(-1, shp[-1]).astype(jnp.float32)
+    widths = [w.shape[-1] for w in ws]
+    basis = _chain_basis_of(*ws)
+    if basis is None:
+        basis = basis_for_int8_matmul(shp[-1])
+        w_cat = jnp.concatenate([jnp.asarray(w) for w in ws], axis=-1)
+    else:
+        for w in ws:
+            if w.residues.ndim != 3:
+                raise ValueError("linear_qkv needs unbatched (C, K, N) "
+                                 f"encoded weights, got {w.residues.shape}")
+        w_cat = RNSTensor(
+            residues=jnp.concatenate([w.residues for w in ws], axis=-1),
+            scale=jnp.concatenate([w.scale for w in ws], axis=-1),
+            basis=basis, bound=max(w.bound for w in ws),
+            signed=all(w.signed for w in ws))
+    xa = encode_activation(xf, basis, backend=spec.backend)
+    y = rns_chain_linear(xa, w_cat, backend=spec.backend)
+    y = y.reshape(*shp[:-1], y.shape[-1]).astype(x.dtype)
+    splits = np.cumsum(widths[:-1])
+    return tuple(jnp.split(y, splits, axis=-1))
 
 
 def rms_norm(x, gamma, eps: float = 1e-6):

@@ -30,8 +30,8 @@ import numpy as np
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
-from .layers import (apply_rope, attention, dtype_of, linear,
-                     make_dense_params, rms_norm, rope, sinusoidal,
+from .layers import (apply_rope, attention, dtype_of, linear, linear_qkv,
+                     make_dense_params, mlp_chain, rms_norm, rope, sinusoidal,
                      update_cache_full, update_cache_ring)
 from .moe import make_moe_params, moe_apply
 from .ssm import init_ssm_cache, make_ssm_params, ssm_apply, ssm_decode_step
@@ -144,9 +144,20 @@ def _attn_full(p, h, cfg: ModelConfig, window, positions):
     B, S, d = h.shape
     H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
-    q = linear(x, p["attn"]["wq"], cfg.linear_spec).reshape(B, S, H, dh)
-    k = linear(x, p["attn"]["wk"], cfg.linear_spec).reshape(B, S, Hk, dh)
-    v = linear(x, p["attn"]["wv"], cfg.linear_spec).reshape(B, S, Hk, dh)
+    spec = cfg.linear_spec
+    if spec.is_rns and spec.domain == "residue":
+        # stacked-QKV chain (DESIGN.md §14): one residue-domain launch for
+        # the three shared-operand projections — one activation forward
+        # conversion instead of three, bit-identical outputs.
+        q, k, v = linear_qkv(x, (p["attn"]["wq"], p["attn"]["wk"],
+                                 p["attn"]["wv"]), spec)
+    else:
+        q = linear(x, p["attn"]["wq"], spec)
+        k = linear(x, p["attn"]["wk"], spec)
+        v = linear(x, p["attn"]["wv"], spec)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, Hk, dh)
+    v = v.reshape(B, S, Hk, dh)
     if cfg.qk_norm:
         q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
@@ -175,9 +186,17 @@ def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache, positions=None):
     B = h.shape[0]
     H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
-    q = linear(x, p["attn"]["wq"], cfg.linear_spec).reshape(B, 1, H, dh)
-    k = linear(x, p["attn"]["wk"], cfg.linear_spec).reshape(B, 1, Hk, dh)
-    v = linear(x, p["attn"]["wv"], cfg.linear_spec).reshape(B, 1, Hk, dh)
+    spec = cfg.linear_spec
+    if spec.is_rns and spec.domain == "residue":
+        q, k, v = linear_qkv(x, (p["attn"]["wq"], p["attn"]["wk"],
+                                 p["attn"]["wv"]), spec)
+    else:
+        q = linear(x, p["attn"]["wq"], spec)
+        k = linear(x, p["attn"]["wk"], spec)
+        v = linear(x, p["attn"]["wv"], spec)
+    q = q.reshape(B, 1, H, dh)
+    k = k.reshape(B, 1, Hk, dh)
+    v = v.reshape(B, 1, Hk, dh)
     if cfg.qk_norm:
         q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
@@ -227,10 +246,18 @@ def _act(name: str):
 
 def _mlp(p, h, cfg: ModelConfig):
     x = rms_norm(h, p["norm_mlp"], cfg.norm_eps)
-    g = _act(cfg.act)(linear(x, p["mlp"]["w_gate"], cfg.linear_spec))
-    if cfg.glu:
-        g = g * linear(x, p["mlp"]["w_up"], cfg.linear_spec)
-    o = linear(g, p["mlp"]["w_down"], cfg.linear_spec)
+    spec = cfg.linear_spec
+    if spec.is_rns and spec.domain == "residue" and cfg.glu:
+        # residue-resident GLU chain (DESIGN.md §14): up → in-domain gate →
+        # down without leaving the RNS domain; one activation forward
+        # conversion + one MRC exit for the whole chain.
+        o = mlp_chain(x, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                      p["mlp"]["w_down"], spec, _act(cfg.act))
+    else:
+        g = _act(cfg.act)(linear(x, p["mlp"]["w_gate"], spec))
+        if cfg.glu:
+            g = g * linear(x, p["mlp"]["w_up"], spec)
+        o = linear(g, p["mlp"]["w_down"], spec)
     o = checkpoint_name(o, "mlp_out")
     if cfg.post_norm:
         o = rms_norm(o, p["norm_mlp_post"], cfg.norm_eps)

@@ -58,7 +58,17 @@ class Engine:
         self.cfg = cfg
         spec = cfg.linear_spec
         if spec.is_rns and spec.encode_weights:
-            params = encode_params(params, backend=spec.backend)
+            # Residue-resident configs (DESIGN.md §14) need the chained MLP's
+            # weights in the chain basis — sized for the gated down-product
+            # bound d_ff·127³, shared by every launch in the chain — while
+            # attention keeps the per-K default.
+            gb = None
+            if spec.domain == "residue" and cfg.glu and cfg.d_ff > 0:
+                from repro.core.rns import basis_for_chain
+
+                gb = {"mlp": basis_for_chain(cfg.d_ff)}
+            params = encode_params(params, backend=spec.backend,
+                                   group_basis=gb)
         self.params = params
         self.smax = smax
         self._decode = jax.jit(

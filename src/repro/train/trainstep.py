@@ -26,9 +26,23 @@ AUX_WEIGHT = 0.01
 Z_WEIGHT = 1e-4
 
 
+def _train_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Training view of the config: residue-domain activation residency
+    (DESIGN.md §14) is a serving datapath — `rns_chain_linear` is
+    forward-only and the megakernel has no JVP rule — so QAT trains the
+    unchained per-linear STE path (`rns_dense`), same as every other rns
+    config.  Serving (prefill/decode) keeps the chained datapath."""
+    if cfg.linear_domain != "float":
+        import dataclasses
+
+        return dataclasses.replace(cfg, linear_domain="float")
+    return cfg
+
+
 def loss_fn(cfg: ModelConfig, params, batch):
     """Token-mean CE over the vocab (sharding-friendly: one-hot einsum picks
     the label logit so no gather crosses the vocab-sharded axis)."""
+    cfg = _train_cfg(cfg)
     logits, aux = T.forward(cfg, params, batch)          # (B, S, V) f32
     labels = batch["labels"]
     lse = jax.scipy.special.logsumexp(logits, axis=-1)   # (B, S)

@@ -20,13 +20,17 @@ SURFACE = {
         "RNSBasis",
         "RNSTensor",
         "basis_for_accumulation",
+        "basis_for_chain",
         "basis_for_int8_matmul",
         "dequantize",
         "encode",
+        "encode_activation",
         "encode_params",
         "paper_n5_basis",
         "quantize_int8",
         "reconstruct_mrc",
+        "requant_scale",
+        "rns_chain_linear",
         "rns_dense",
         "rns_int_matmul",
         "tau_basis",

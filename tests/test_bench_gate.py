@@ -1,0 +1,46 @@
+"""Direction rules of the perf-regression gate (`benchmarks/gate.py`).
+
+The gate compares a fresh smoke BENCH json against the last *committed*
+``BENCH_<n>.json``: ``decode_*`` rows are throughputs (regression = fresh
+below prev/tol), everything else is a latency (regression = fresh above
+prev·tol); unmatched rows never gate.  CI runs the CLI; these tests pin the
+comparison semantics so a refactor can't silently flip a direction.
+"""
+from benchmarks.gate import compare
+
+
+def _payload(rows):
+    return {"rows": [{"name": n, "value": v} for n, v in rows]}
+
+
+def test_latency_rows_gate_upward():
+    prev = _payload([("rns_matmul_jnp_x", 100.0)])
+    assert compare(prev, _payload([("rns_matmul_jnp_x", 250.0)]), 3.0) == []
+    regs = compare(prev, _payload([("rns_matmul_jnp_x", 301.0)]), 3.0)
+    assert [(r[0], r[3]) for r in regs] == [("rns_matmul_jnp_x", "us")]
+
+
+def test_decode_rows_gate_downward():
+    prev = _payload([("decode_scan_smollm_B2_T32", 900.0)])
+    # faster decode is fine, even by a lot
+    assert compare(prev, _payload([("decode_scan_smollm_B2_T32", 9000.0)]),
+                   3.0) == []
+    # throughput cliff past tol fails
+    regs = compare(prev, _payload([("decode_scan_smollm_B2_T32", 299.0)]),
+                   3.0)
+    assert [(r[0], r[3]) for r in regs] == [("decode_scan_smollm_B2_T32",
+                                             "tok/s")]
+
+
+def test_unmatched_rows_do_not_gate():
+    prev = _payload([("rns_matmul_jnp_x", 100.0)])
+    fresh = _payload([("rns_new_section_row", 1e9),
+                      ("decode_new_row", 1e-9)])
+    assert compare(prev, fresh, 3.0) == []
+
+
+def test_tolerance_is_a_parameter():
+    prev = _payload([("row_a", 100.0)])
+    fresh = _payload([("row_a", 150.0)])
+    assert compare(prev, fresh, 2.0) == []
+    assert len(compare(prev, fresh, 1.2)) == 1

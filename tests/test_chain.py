@@ -1,0 +1,288 @@
+"""Residue-domain activation residency (DESIGN.md §14).
+
+The contract under test: a back-to-back linear chain that enters the RNS
+domain ONCE (`rns_tensor.encode_activation`), hands residues between
+megakernel launches (`rns_linear.rns_chain_linear` — residue-in,
+``emit="residues"`` in-domain requantize, fused modular gate), and exits
+through ONE MRC reverse must be bit-identical to the unchained per-linear
+staged composition under the shared requantize rule
+(`kernels/ref.rns_fused_chain_ref`) — on the paper's n=5/n=8/n=11 channel
+sets, through both the jnp staged twin and the pallas_fused megakernel
+(interpret off-TPU), at the ±127 saturated corners, and inside the serving
+engine's decode jaxpr (zero standalone conversion ops).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.linear_spec import LinearSpec
+from repro.core.quant import quantize_int8, requant_const
+from repro.core.rns import (N8_CHANNELS, RNSBasis, basis_for_chain,
+                            basis_for_int8_matmul, paper_n5_basis)
+from repro.core.rns_linear import rns_chain_linear
+from repro.core.rns_tensor import encode, encode_activation
+from repro.kernels import ref
+from repro.models.layers import linear, linear_qkv, mlp_chain
+
+
+def _bases():
+    return [
+        ("paper-n5", paper_n5_basis()),
+        ("n8", RNSBasis(name="n8-set", moduli=N8_CHANNELS)),
+        # Table III's full n=11 channel set is not pairwise coprime
+        # (gcd(2045, 1025) = 5): the chain runs on its maximal coprime
+        # subset, same as the fused-kernel tests.
+        ("n11", RNSBasis(name="n11-sub", moduli=(2051, 2039, 2057, 3071))),
+    ]
+
+
+def _chain(x, eg, eu, ed, backend):
+    """The mlp_chain composition, spelled out at the rns_chain_linear level
+    so it can run on an arbitrary test basis."""
+    xa = encode_activation(x, eg.basis, backend=backend)
+    gate_f = rns_chain_linear(xa, eg, backend=backend)
+    up = rns_chain_linear(xa, eu, emit="residues", backend=backend)
+    gq, sg = quantize_int8(jax.nn.silu(gate_f), axis=-1)
+    return rns_chain_linear(up, ed, gate=gq, gate_scale=sg, backend=backend)
+
+
+@pytest.mark.parametrize("name,basis", _bases(), ids=[n for n, _ in _bases()])
+def test_chain_matches_unchained_ref_all_bases(name, basis):
+    """Chained (1 forward conversion + 1 MRC) ≡ unchained staged oracle,
+    bit for bit, on every paper basis — jnp twin AND megakernel."""
+    M, d, F, N = 9, 48, 32, 16          # F·(m−1)² int32-safe on n11
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((M, d)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((d, F)), jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((d, F)), jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((F, N)), jnp.float32)
+    eg, eu, ed = (encode(w, basis) for w in (wg, wu, wd))
+    want = np.asarray(ref.rns_fused_chain_ref(x, eg, eu, ed, basis))
+    got_jnp = np.asarray(_chain(x, eg, eu, ed, "jnp"))
+    got_fused = np.asarray(_chain(x, eg, eu, ed, "pallas_fused"))
+    assert got_jnp.tobytes() == want.tobytes()
+    assert got_fused.tobytes() == want.tobytes()
+
+
+@pytest.mark.parametrize("backend", ["rns_int8:jnp", "rns_int8:pallas_fused"])
+def test_qkv_stacked_bit_identity(backend):
+    """Stacked QKV (one launch, one activation encode) is bit-identical to
+    three separate unchained linears: per-column weight quantization and the
+    per-output-column epilogue are independent across columns."""
+    d = 48
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 5, d)), jnp.float32)
+    basis = basis_for_int8_matmul(d)
+    enc = tuple(encode(jnp.asarray(rng.standard_normal((d, n)), jnp.float32),
+                       basis) for n in (32, 16, 16))
+    spec = LinearSpec.parse(backend)
+    got = linear_qkv(x, enc, spec)
+    want = [linear(x, e, spec) for e in enc]
+    for g, w in zip(got, want):
+        assert np.asarray(g).tobytes() == np.asarray(w).tobytes()
+
+
+@pytest.mark.parametrize("backend", ["rns_int8:jnp", "rns_int8:pallas_fused"])
+def test_mlp_chain_matches_ref(backend):
+    """The model-layer entry point (`layers.mlp_chain`, the datapath the
+    transformer dispatches for spec.domain == "residue") reproduces the
+    unchained oracle on the chain basis."""
+    M, d, F = 6, 32, 64
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((2, 3, d)), jnp.float32)
+    basis = basis_for_chain(F)
+    wg, wu = (jnp.asarray(rng.standard_normal((d, F)), jnp.float32)
+              for _ in range(2))
+    wd = jnp.asarray(rng.standard_normal((F, d)), jnp.float32)
+    eg, eu, ed = (encode(w, basis) for w in (wg, wu, wd))
+    spec = LinearSpec.parse(backend)
+    got = np.asarray(mlp_chain(x, eg, eu, ed, spec, jax.nn.silu))
+    want = np.asarray(ref.rns_fused_chain_ref(
+        x.reshape(-1, d), eg, eu, ed, basis)).reshape(2, 3, d)
+    assert got.tobytes() == want.astype(np.float32).tobytes()
+    assert got.shape == x.shape
+
+
+def test_mlp_chain_rejects_undersized_basis():
+    """A basis that cannot hold the gated down-projection bound 2·F·127³
+    must be refused, not silently wrapped."""
+    d, F = 32, 64
+    small = basis_for_int8_matmul(d)          # sized for K·127², not F·127³
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, d)), jnp.float32)
+    ws = [encode(jnp.asarray(rng.standard_normal(s), jnp.float32), small)
+          for s in ((d, F), (d, F), (F, d))]
+    with pytest.raises(ValueError, match="cannot hold"):
+        mlp_chain(x, *ws, LinearSpec.parse("rns_int8:jnp"), jax.nn.silu)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas_fused"])
+def test_emit_requant_saturated_corner(backend):
+    """±127-saturated operands: the in-domain requantize's |t/creq| lands
+    EXACTLY on the 127 boundary (|val·scol| = K·127²·s and creq = s·K·127),
+    so the clip is a no-op — no information loss at the extreme — and the
+    emitted residues decode to exactly ±127, never −128."""
+    M = K = F = 32
+    basis = basis_for_chain(F)
+    x = jnp.full((M, K), 127.0, jnp.float32)        # quantizes to +127, s=1
+    sign = np.where(np.arange(F) % 2 == 0, 1.0, -1.0)
+    w = jnp.asarray(np.broadcast_to(sign, (K, F)), jnp.float32)  # q = ±127
+    eu = encode(w, basis)
+    xa = encode_activation(x, basis, backend=backend)
+    out = rns_chain_linear(xa, eu, emit="residues", backend=backend)
+    # the exact integer product is ±K·127²; t/creq = ±127 exactly
+    scol = np.asarray(eu.scale, np.float32).reshape(-1)
+    creq = float(requant_const(eu.scale, K))
+    t = K * 127.0 * 127.0 * scol * sign
+    assert np.allclose(np.abs(t) / creq, 127.0)
+    # decode the emitted residues channel-wise: every channel must carry
+    # |±127|_m canonically (bound 127, signed, never −128)
+    want_q = (127.0 * sign).astype(np.int64)
+    res = np.asarray(out.residues)
+    for c, m in enumerate(out.moduli):
+        assert np.array_equal(res[c].astype(np.int64),
+                              np.broadcast_to(want_q % m, (M, F)))
+    assert out.bound == 127 and out.signed
+    # and the carried activation scale follows the shared rule s_row·creq
+    assert np.allclose(np.asarray(out.scale),
+                       np.asarray(xa.scale, np.float32) * creq)
+
+
+def test_gate_with_emit_is_refused():
+    """gate= with emit='residues' would need a K·127³-sized requantize
+    bound — unsupported by design, must raise."""
+    d = F = 32
+    basis = basis_for_chain(F)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((4, d)), jnp.float32)
+    eu = encode(jnp.asarray(rng.standard_normal((d, F)), jnp.float32), basis)
+    xa = encode_activation(x, basis, backend="jnp")
+    g = jnp.ones((4, d), jnp.int8)
+    with pytest.raises(ValueError, match="emit"):
+        rns_chain_linear(xa, eu, gate=g, gate_scale=jnp.ones((4, 1)),
+                         emit="residues", backend="jnp")
+
+
+def test_mlp_chain_single_forward_conversion(monkeypatch):
+    """Under the megakernel backend the whole chain performs EXACTLY ONE
+    standalone activation forward conversion (the `encode_activation` entry)
+    and ZERO standalone MRC reverses — gate re-encode and the chain exit are
+    fused in-kernel."""
+    from repro.core import conversion_plan as cvp
+
+    d, F = 32, 64
+    basis = basis_for_chain(F)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((4, d)), jnp.float32)
+    ws = [encode(jnp.asarray(rng.standard_normal(s), jnp.float32), basis)
+          for s in ((d, F), (d, F), (F, d))]
+    calls = {"fwd": 0, "rev": 0}
+    real_fwd = cvp.forward
+
+    def spy_fwd(*a, **k):
+        calls["fwd"] += 1
+        return real_fwd(*a, **k)
+
+    real_rev = cvp.ConversionPlan.reverse
+
+    def spy_rev(self, *a, **k):
+        calls["rev"] += 1
+        return real_rev(self, *a, **k)
+
+    monkeypatch.setattr(cvp, "forward", spy_fwd)
+    monkeypatch.setattr(cvp.ConversionPlan, "reverse", spy_rev)
+    mlp_chain(x, *ws, LinearSpec.parse("rns_int8:pallas_fused"), jax.nn.silu)
+    assert calls["fwd"] == 1, calls
+    assert calls["rev"] == 0, calls
+
+
+def test_resident_decode_jaxpr_zero_standalone_conversions():
+    """The serving proof: the resident smoke config's decode-step jaxpr
+    contains NO `rem`/`mod` primitives outside pallas_call bodies — every
+    modular reduction of the hot path (forward conversion, channel matmul,
+    fold, MRC) lives inside a kernel."""
+    from repro.configs.base import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serve.engine import Engine
+
+    cfg = get_smoke_config("rns-smollm-135m-resident")
+    spec = cfg.linear_spec
+    assert spec.domain == "residue" and spec.encode_weights
+    params = T.make_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, smax=32)
+    batch, plen = eng._pack([[1, 2, 3], [4, 5]])
+    _, cache, _ = eng._prefill(eng.params, batch, smax=eng.smax)
+    jaxpr = jax.make_jaxpr(
+        lambda p, c, t, pos: T.decode_step(
+            cfg, p, c, {"tokens": t}, jnp.int32(plen), positions=pos))(
+        eng.params, cache, jnp.zeros((2, 1), jnp.int32),
+        jnp.zeros((2,), jnp.int32))
+
+    stats = {"rem": 0, "pallas": 0}
+
+    def walk(jx, inside_pallas):
+        for eqn in jx.eqns:
+            nm = eqn.primitive.name
+            if nm == "pallas_call":
+                stats["pallas"] += 1
+            if not inside_pallas and nm in ("rem", "mod"):
+                stats["rem"] += 1
+            inner = inside_pallas or nm == "pallas_call"
+            for v in eqn.params.values():
+                for j in (v if isinstance(v, (list, tuple)) else [v]):
+                    core = getattr(j, "jaxpr", None)
+                    if core is not None:
+                        walk(core if hasattr(core, "eqns") else j, inner)
+                    elif hasattr(j, "eqns"):
+                        walk(j, inner)
+
+    walk(jaxpr.jaxpr, False)
+    assert stats["rem"] == 0, stats
+    assert stats["pallas"] > 0, stats       # the kernels are actually there
+
+
+def test_resident_engine_generates():
+    """End-to-end: the resident config decodes through Engine (scan path)
+    and emits the same greedy tokens as the host loop."""
+    from repro.configs.base import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serve.engine import Engine
+
+    cfg = get_smoke_config("rns-smollm-135m-resident")
+    params = T.make_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, smax=32)
+    prompts = [[1, 2, 3], [4, 5]]
+    out_scan = eng.generate(prompts, max_new_tokens=4, engine="scan")
+    out_host = eng.generate(prompts, max_new_tokens=4, engine="host")
+    assert out_scan == out_host
+    assert all(len(o) == len(p) + 4 for o, p in zip(out_scan, prompts))
+
+
+def test_linear_spec_residue_domain_validation():
+    spec = LinearSpec.parse("rns_int8:pallas_fused")
+    ok = dataclasses.replace(spec, encode_weights=True, domain="residue")
+    assert "domain=residue" in str(ok)
+    with pytest.raises(ValueError):
+        dataclasses.replace(spec, domain="residue")        # needs encoding
+    with pytest.raises(ValueError):
+        dataclasses.replace(LinearSpec.parse("bf16"), domain="residue")
+
+
+def test_tune_decode_candidates_and_variant_footprints():
+    """Decode-shape sweeps: small-M calls draw from the decode candidate
+    pool, and the residue-in / emit kernel variants account for their larger
+    VMEM tiles ((C,bm,bk) input, (C,bm,bn) output)."""
+    from repro.kernels.tune import CANDIDATES, DECODE_CANDIDATES, \
+        vmem_footprint
+
+    assert all(bm <= 64 for bm, _, _ in DECODE_CANDIDATES)
+    base = vmem_footprint((16, 128, 512), 6)
+    res_in = vmem_footprint((16, 128, 512), 6, x_channels=True)
+    emit = vmem_footprint((16, 128, 512), 6, x_channels=True, emit=True)
+    assert res_in > base
+    assert emit != res_in           # (C,bm,bn) int8 out vs (bm,bn) f32 out
+    assert set(DECODE_CANDIDATES).isdisjoint(set())  # well-formed tuples
+    assert DECODE_CANDIDATES != CANDIDATES
