@@ -12,7 +12,8 @@ Comparison rules:
   * rows are matched by exact name; rows present on only one side are
     ignored (sections grow across PRs — the gate guards regressions, not
     coverage);
-  * ``decode_*`` rows are throughputs (tok/s): FAIL when fresh < prev / tol;
+  * ``decode_*`` and ``serving_*`` rows are throughputs (tok/s): FAIL when
+    fresh < prev / tol;
   * every other row is a latency (µs): FAIL when fresh > prev · tol;
   * tol defaults to 3.0 (``RNS_BENCH_GATE_TOL``) — smoke shapes on shared
     CI runners jitter by 2x routinely; 3x is past scheduler noise and still
@@ -21,7 +22,7 @@ Comparison rules:
     different jax backend or smoke mode — cross-device timings don't gate —
     or when no committed baseline exists yet.
 
-Usage: PYTHONPATH=src python -m benchmarks.gate [--fresh BENCH_6.json]
+Usage: PYTHONPATH=src python -m benchmarks.gate [--fresh BENCH_7.json]
 """
 from __future__ import annotations
 
@@ -66,7 +67,7 @@ def compare(prev: dict, fresh: dict, tol: float):
         if name not in prev_rows:
             continue
         old = prev_rows[name]
-        if name.startswith("decode_"):                 # throughput: higher ok
+        if name.startswith(("decode_", "serving_")):   # throughput: higher ok
             if old > 0 and val < old / tol:
                 regressions.append((name, old, val, "tok/s"))
         else:                                          # latency: lower ok
@@ -79,8 +80,8 @@ def main(argv=None) -> int:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--fresh", default="BENCH_6.json",
-                    help="fresh benchmark json to gate (BENCH_6.json)")
+    ap.add_argument("--fresh", default="BENCH_7.json",
+                    help="fresh benchmark json to gate (BENCH_7.json)")
     args = ap.parse_args(argv)
 
     tol = float(os.environ.get(TOL_ENV, "3.0"))

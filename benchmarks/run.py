@@ -1,7 +1,7 @@
 """Benchmark driver: one section per paper table/figure.
 
 Prints a final `name,us_per_call,derived` CSV (harness contract) and writes
-the same rows as machine-readable **BENCH_6.json** — the perf-trajectory
+the same rows as machine-readable **BENCH_7.json** — the perf-trajectory
 artifact (commit hash + device + per-row values: the matmul
 forward/matmul/reverse conversion split, the fused-vs-staged megakernel row
 with its estimated-HBM-bytes columns, and decode tok/s), uploaded by CI so
@@ -20,7 +20,7 @@ import sys
 import time
 import traceback
 
-BENCH_JSON = "BENCH_6.json"
+BENCH_JSON = "BENCH_7.json"
 
 
 def _commit() -> str:
@@ -53,7 +53,7 @@ def main(argv=None) -> None:
     import jax
 
     from . import (analytical_model, app_level, circuit_level, decode_bench,
-                   matmul_bench, synthesis_tables)
+                   matmul_bench, serving_bench, synthesis_tables)
     sections = [
         ("Table I / Fig. 4 (analytical model)", analytical_model),
         ("Fig. 5 analogue (per-modulus circuit level)", circuit_level),
@@ -61,6 +61,7 @@ def main(argv=None) -> None:
         ("Fig. 8 (application-level surface)", app_level),
         ("RNS matmul system analogue", matmul_bench),
         ("Decode throughput (host vs scan, live vs encoded)", decode_bench),
+        ("Continuous-batching serving (scheduler vs static)", serving_bench),
     ]
     all_rows = []
     failures = []
@@ -79,7 +80,7 @@ def main(argv=None) -> None:
     # machine-readable trajectory artifact — written even on section
     # failure so a partial run still leaves evidence.
     payload = {
-        "bench": 6,
+        "bench": 7,
         "commit": _commit(),
         "device": jax.default_backend(),
         "smoke": bool(args.smoke),

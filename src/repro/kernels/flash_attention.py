@@ -29,10 +29,11 @@ __all__ = ["flash_attention"]
 NEG_INF = -1e30
 
 
-def _kernel(pad_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _kernel(pad_ref, qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *,
             nk: int, bq: int, bk: int, sq: int, sk: int,
             causal: bool, window: int | None, softcap: float | None,
-            scale: float, masked: bool):
+            scale: float, masked: bool, use_pos: bool):
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -42,19 +43,22 @@ def _kernel(pad_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # block-level reachability: last query of the block vs first key
+    # block-level reachability: last query of the block vs first key.  With
+    # explicit positions (use_pos) buffer index and position are decoupled —
+    # a block's reachability is data-dependent, so no block is skipped.
     q_last = iq * bq + bq - 1 + (sk - sq)        # align causal frontier
     k_first = jk * bk
     needed = True
-    if causal:
+    if causal and not use_pos:
         needed = k_first <= q_last
-    if window is not None:
+    if window is not None and not use_pos:
         # first key of block must not be entirely left of every query window
         q_first = iq * bq + (sk - sq)
         needed = jnp.logical_and(needed, (jk * bk + bk - 1) > q_first - window) \
             if causal else needed
 
-    @pl.when(needed if (causal or window is not None) else True)
+    @pl.when(needed if ((causal or window is not None) and not use_pos)
+             else True)
     def _step():
         q = q_ref[0].astype(jnp.float32)          # (bq, d)
         k = k_ref[0].astype(jnp.float32)          # (bk, d)
@@ -63,10 +67,17 @@ def _kernel(pad_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                                 preferred_element_type=jnp.float32) * scale
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
-        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
-            + (sk - sq)
-        kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        mask = jnp.ones((bq, bk), dtype=bool)
+        if use_pos:
+            # explicit absolute coordinates (paged-KV gather layout): a
+            # row's position comes from the operand, −1 ⇒ invalid row.
+            qpos = jnp.broadcast_to(qpos_ref[0][:, None], (bq, bk))
+            kpos = jnp.broadcast_to(kpos_ref[0][None, :], (bq, bk))
+            mask = (kpos >= 0) & (qpos >= 0)
+        else:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+                + (sk - sq)
+            kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = jnp.ones((bq, bk), dtype=bool)
         if causal:
             mask &= kpos <= qpos
         if window is not None:
@@ -103,6 +114,7 @@ def _kernel(pad_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     "causal", "window", "softcap", "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
                     softcap: float | None = None, pad=None,
+                    qpos=None, kpos=None,
                     block_q: int = 256, block_k: int = 256,
                     interpret: bool = True):
     """(B, H, Sq, D) × (B, H, Sk, D)² → (B, H, Sq, D).
@@ -114,13 +126,35 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
     right-aligned to a common length): keys at positions < pad[b] are
     invalid and masked for every query of sequence b; fully-padded query
     rows produce zeros.  Matches `attention_ref(pad=...)`.
+
+    qpos/kpos: optional ((Sq,)/(Sk,) or (B, Sq)/(B, Sk)) int32 EXPLICIT
+    absolute positions — the paged-KV gather convention (DESIGN.md §15): a
+    key row's position comes from the block table, not its buffer index,
+    and −1 marks an invalid (unmapped/pad) row.  Causal/window masking then
+    compares the explicit coordinates; block-skip pruning is disabled
+    (reachability is data-dependent).  Mutually exclusive with ``pad``;
+    matches `attention_ref(qpos=..., kpos=...)`.
     """
     B, H, Sq, D = q.shape
     Sk = k.shape[2]
     scale = 1.0 / np.sqrt(D)
     masked = pad is not None
+    use_pos = qpos is not None or kpos is not None
+    if masked and use_pos:
+        raise ValueError("pad= and explicit qpos/kpos= are mutually "
+                         "exclusive")
     padf = jnp.repeat(jnp.asarray(pad if masked else np.zeros((B,)),
                                   jnp.int32), H)       # (B·H,)
+
+    def _flatpos(p, default_fn, S):
+        p = default_fn() if p is None else jnp.asarray(p, jnp.int32)
+        p = jnp.broadcast_to(p[None] if p.ndim == 1 else p, (B, S))
+        return jnp.repeat(p, H, axis=0)                # (B·H, S)
+
+    qposf = _flatpos(qpos if use_pos else None,
+                     lambda: jnp.arange(Sq, dtype=jnp.int32) + (Sk - Sq), Sq)
+    kposf = _flatpos(kpos if use_pos else None,
+                     lambda: jnp.arange(Sk, dtype=jnp.int32), Sk)
     qf = q.reshape(B * H, Sq, D)
     kf = k.reshape(B * H, Sk, D)
     vf = v.reshape(B * H, Sk, D)
@@ -128,18 +162,22 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
     pq, pk = (-Sq) % bq, (-Sk) % bk
     if pq:
         qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+        qposf = jnp.pad(qposf, ((0, 0), (0, pq)), constant_values=-1)
     if pk:
         kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
         vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+        kposf = jnp.pad(kposf, ((0, 0), (0, pk)), constant_values=-1)
     Sqp, Skp = Sq + pq, Sk + pk
     nk = Skp // bk
     out = pl.pallas_call(
         functools.partial(_kernel, nk=nk, bq=bq, bk=bk, sq=Sqp, sk=Skp,
                           causal=causal, window=window, softcap=softcap,
-                          scale=scale, masked=masked),
+                          scale=scale, masked=masked, use_pos=use_pos),
         grid=(B * H, Sqp // bq, nk),
         in_specs=[
             pl.BlockSpec((1,), lambda b, i, j: (b,)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bk), lambda b, i, j: (b, j)),
             pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
@@ -155,7 +193,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
             dimension_semantics=("parallel", "parallel",
                                  "arbitrary")) if not interpret else None,
         interpret=interpret,
-    )(padf, qf, kf, vf)
+    )(padf, qposf, kposf, qf, kf, vf)
     # padded causal-frontier shift: queries were padded on the right, so real
     # rows used sk-sq offset computed with padded sizes; compensate by having
     # padded only when (Skp - Sqp) == (Sk - Sq), enforced here.

@@ -181,7 +181,7 @@ def fold_ref(x, moduli: Sequence[int], bound: int):
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
                   softcap: float | None = None, scale: float | None = None,
-                  pad=None):
+                  pad=None, qpos=None, kpos=None):
     """Oracle attention: (B, H, Sq, D), (B, H, Sk, D), (B, H, Sk, D).
 
     Causal + optional sliding window + optional logit softcap — the exact
@@ -189,22 +189,45 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
     ``pad`` ((B,) int32, optional) marks the first pad[b] key positions of
     sequence b invalid (the ragged left-padded batch mask); fully-masked
     query rows produce zeros, matching the kernel.
+
+    ``qpos``/``kpos`` ((Sq,)/(Sk,) or (B, Sq)/(B, Sk) int32, optional)
+    switch to EXPLICIT absolute positions — the paged-KV gather layout
+    (DESIGN.md §15), where a key row's position is given by the block table
+    rather than its buffer index and −1 marks an invalid (unmapped / pad)
+    row.  Mutually exclusive with ``pad``; causal/window masking then
+    compares the explicit coordinates.
     """
     sq, sk = q.shape[-2], k.shape[-2]
     scale = scale if scale is not None else 1.0 / np.sqrt(q.shape[-1])
     logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
     if softcap is not None:
         logits = jnp.tanh(logits / softcap) * softcap
-    qpos = jnp.arange(sq)[:, None] + (sk - sq)
-    kpos = jnp.arange(sk)[None, :]
-    mask = jnp.ones((sq, sk), dtype=bool)
-    if causal:
-        mask &= kpos <= qpos
-    if window is not None:
-        mask &= kpos > qpos - window
-    mask = mask[None]                                        # (1, sq, sk)
-    if pad is not None:
-        mask = mask & (kpos[None] >= jnp.asarray(pad)[:, None, None])
+    if qpos is not None or kpos is not None:
+        if pad is not None:
+            raise ValueError("pad= and explicit qpos/kpos= are mutually "
+                             "exclusive")
+        qp = jnp.arange(sq, dtype=jnp.int32) + (sk - sq) if qpos is None \
+            else jnp.asarray(qpos, jnp.int32)
+        kp = jnp.arange(sk, dtype=jnp.int32) if kpos is None \
+            else jnp.asarray(kpos, jnp.int32)
+        qp = qp[None] if qp.ndim == 1 else qp                # (Bm, sq)
+        kp = kp[None] if kp.ndim == 1 else kp                # (Bm, sk)
+        mask = (kp[:, None, :] >= 0) & (qp[:, :, None] >= 0)
+        if causal:
+            mask &= kp[:, None, :] <= qp[:, :, None]
+        if window is not None:
+            mask &= kp[:, None, :] > qp[:, :, None] - window
+    else:
+        qpos_i = jnp.arange(sq)[:, None] + (sk - sq)
+        kpos_i = jnp.arange(sk)[None, :]
+        mask = jnp.ones((sq, sk), dtype=bool)
+        if causal:
+            mask &= kpos_i <= qpos_i
+        if window is not None:
+            mask &= kpos_i > qpos_i - window
+        mask = mask[None]                                    # (1, sq, sk)
+        if pad is not None:
+            mask = mask & (kpos_i[None] >= jnp.asarray(pad)[:, None, None])
     logits = jnp.where(mask[:, None], logits, -1e30)
     alive = mask.any(axis=-1)[:, None, :, None]              # (B|1,1,sq,1)
     p = jnp.where(alive, jax.nn.softmax(logits, axis=-1), 0.0)

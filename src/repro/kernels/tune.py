@@ -31,7 +31,8 @@ from pathlib import Path
 from typing import Callable, Optional, Sequence, Tuple
 
 __all__ = ["DEFAULT_BLOCKS", "CANDIDATES", "DECODE_CANDIDATES", "blocks_for",
-           "cache_path", "clear_memory_cache", "vmem_footprint"]
+           "cache_path", "clear_memory_cache", "vmem_footprint",
+           "decode_shapes_for", "warm_for_config", "prepopulate"]
 
 Blocks = Tuple[int, int, int]
 
@@ -228,3 +229,168 @@ def blocks_for(M: int, K: int, N: int, C: int, *, dtype: str = "int8",
         table[key] = list(best)
         _save_table(table)
     return best
+
+
+# -------------------------------------------------- serving prepopulation --
+# Decode batch sizes the config zoo's serving paths launch: the static
+# engine decodes at the generate() batch size, the slot scheduler at its
+# (fixed) slot count — both a handful of rows.
+ZOO_BATCH_SIZES = (1, 2, 4, 8)
+
+
+def decode_shapes_for(cfg, batch_sizes=ZOO_BATCH_SIZES):
+    """Enumerate the fused-megakernel launch shapes of ONE decode step.
+
+    Mirrors the dispatch in models/{transformer,layers}.py: per-linear
+    launches for ``domain="float"``; the stacked-QKV chain, residue-resident
+    GLU chain (gate / up-with-emit / gated-down) and the plain wo launch for
+    ``domain="residue"`` (DESIGN.md §14).  Returns a deduped list of dicts
+    ``{backend, C, M, K, N, dtype, x_channels, emit}`` — empty for configs
+    that never hit the fused kernel.
+    """
+    spec = cfg.linear_spec
+    if not (spec.is_rns and spec.backend == "pallas_fused"):
+        return []
+    from repro.core.channel_plan import residue_dtype_for
+    from repro.core.rns import basis_for_chain, basis_for_int8_matmul
+
+    d, F = cfg.d_model, cfg.d_ff
+    H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    has_attn = cfg.attention != "none" or cfg.hybrid
+    shapes, seen = [], set()
+
+    def add(backend, basis, M, K, N, x_channels=False, emit=False):
+        import jax.numpy as jnp
+        dtype = str(jnp.dtype(residue_dtype_for(basis.moduli)))
+        s = (backend, len(basis.moduli), M, K, N, dtype, x_channels, emit)
+        if s not in seen:
+            seen.add(s)
+            shapes.append(dict(backend=backend, C=len(basis.moduli), M=M,
+                               K=K, N=N, dtype=dtype, x_channels=x_channels,
+                               emit=emit))
+
+    for M in batch_sizes:
+        if spec.domain == "residue":
+            if has_attn:
+                # stacked-QKV chain launch + the plain wo exit launch
+                add("pallas_fused_res", basis_for_int8_matmul(d), M, d,
+                    (H + 2 * Hk) * dh, x_channels=True)
+                add("pallas_fused", basis_for_int8_matmul(H * dh), M,
+                    H * dh, d)
+            if cfg.glu and F > 0:
+                cb = basis_for_chain(F)
+                add("pallas_fused_res", cb, M, d, F, x_channels=True)
+                add("pallas_fused_res_emit", cb, M, d, F, x_channels=True,
+                    emit=True)
+                add("pallas_fused_res", cb, M, F, d, x_channels=True)
+        else:
+            pairs = set()
+            if has_attn:
+                pairs |= {(d, H * dh), (d, Hk * dh), (H * dh, d)}
+            if F > 0:
+                pairs |= {(d, F), (F, d)}
+            for K, N in sorted(pairs):
+                add("pallas_fused", basis_for_int8_matmul(K), M, K, N)
+    return shapes
+
+
+def warm_for_config(cfg, batch_sizes=ZOO_BATCH_SIZES):
+    """Resolve every decode shape of ``cfg`` through `blocks_for` (called by
+    `serve.Engine.__init__`): a populated table makes every lookup a hit and
+    cold-start serving pays zero on-device sweeps.  Returns a per-shape
+    report ``[{key, hit, blocks}, …]`` (empty for non-fused configs)."""
+    report = []
+    shapes = decode_shapes_for(cfg, batch_sizes)
+    if not shapes:
+        return report
+    table = _load_table()
+    for s in shapes:
+        key = _shape_key(s["M"], s["K"], s["N"], s["C"], s["dtype"],
+                         s["backend"])
+        hit = key in table
+        blocks = blocks_for(s["M"], s["K"], s["N"], s["C"], dtype=s["dtype"],
+                            backend=s["backend"], x_channels=s["x_channels"],
+                            emit=s["emit"])
+        report.append({"key": key, "hit": hit, "blocks": tuple(blocks)})
+    return report
+
+
+def _fused_archs():
+    from repro.configs.base import get_config, list_archs
+
+    return [name for name in list_archs()
+            if get_config(name).linear_spec.backend == "pallas_fused"]
+
+
+def prepopulate(archs=None, batch_sizes=ZOO_BATCH_SIZES) -> int:
+    """Offline table prepopulation for the config zoo's decode shapes
+    (``python -m repro.kernels.tune --prepopulate``).
+
+    On device: a real best-of-reps sweep per missing shape (via
+    `blocks_for`).  Under interpret (CPU): the clipped static default is
+    written EXPLICITLY — interpret timings would poison the table, but a
+    committed entry still makes cold-start lookups hits (the key carries the
+    device kind, so a TPU runner sweeps its own rows independently).
+    Covers both the full and the smoke variant of every fused-backend arch;
+    returns the number of NEW entries written.
+    """
+    from repro.configs.base import get_config, get_smoke_config
+    from repro.core.channel_plan import resolve_interpret
+
+    names = list(archs) if archs is not None else _fused_archs()
+    cfgs = []
+    for name in names:
+        cfgs.append(get_config(name))
+        cfgs.append(get_smoke_config(name))
+    table = _load_table()
+    new = 0
+    for cfg in cfgs:
+        for s in decode_shapes_for(cfg, batch_sizes):
+            key = _shape_key(s["M"], s["K"], s["N"], s["C"], s["dtype"],
+                             s["backend"])
+            if key in table:
+                continue
+            if resolve_interpret(None):
+                best = _clip(DEFAULT_BLOCKS, s["M"], s["K"], s["N"])
+                table[key] = list(best)
+            else:
+                blocks_for(s["M"], s["K"], s["N"], s["C"], dtype=s["dtype"],
+                           backend=s["backend"], x_channels=s["x_channels"],
+                           emit=s["emit"])
+            new += 1
+    _save_table(table)
+    return new
+
+
+def _main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Autotuner table maintenance for the fused megakernel")
+    ap.add_argument("--prepopulate", action="store_true",
+                    help="fill the table for the config zoo's decode shapes "
+                         "(device: swept; interpret: static defaults)")
+    ap.add_argument("--out", default=None,
+                    help="table path (defaults to $RNS_TUNE_CACHE / the "
+                         "user-cache default)")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch names (default: every "
+                         "fused-backend arch in the registry)")
+    args = ap.parse_args(argv)
+    if args.out:
+        os.environ["RNS_TUNE_CACHE"] = args.out
+        clear_memory_cache()
+    if args.prepopulate:
+        archs = args.archs.split(",") if args.archs else None
+        n = prepopulate(archs=archs)
+        print(f"# prepopulate: {n} new entries -> {cache_path()} "
+              f"({len(_load_table())} total)")
+        return 0
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(_main())

@@ -22,7 +22,8 @@ from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
 
-__all__ = ["analytic_cost", "CostReport"]
+__all__ = ["analytic_cost", "CostReport", "decode_cache_bytes",
+           "paged_cache_bytes"]
 
 BF16 = 2
 F32 = 4
@@ -312,3 +313,59 @@ def analytic_cost(cfg: ModelConfig, shape: ShapeConfig, *,
 
     return CostReport(flops=flops_dev, flops_int8=flops_int8,
                       hbm_bytes=hbm, ici_bytes=ici, breakdown=bk)
+
+
+# --------------------------------------------------- serving cache sizing --
+def _ssm_state_bytes(cfg: ModelConfig, batch: int, itemsize: int) -> int:
+    """Per-layer SSM decode-state bytes, mirroring `ssm.init_ssm_cache`:
+    f32 (B, H, N, P) state + param-dtype (B, conv−1, d_inner + 2N) conv."""
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * N
+    return (batch * H * N * P * F32
+            + batch * (cfg.ssm_conv - 1) * conv_dim * itemsize)
+
+
+def _param_itemsize(cfg: ModelConfig) -> int:
+    import jax.numpy as jnp
+    import numpy as np
+
+    return int(np.dtype(jnp.dtype(cfg.param_dtype)).itemsize)
+
+
+def decode_cache_bytes(cfg: ModelConfig, batch: int, smax: int) -> int:
+    """STATIC decode-cache reservation in bytes — what `transformer.
+    init_cache(cfg, batch, smax)` actually allocates (per-layer K/V
+    ``batch × min(window, smax)`` rows + SSM state), the ``B·smax`` bound
+    the paged pool is measured against (`benchmarks/serving_bench.py`)."""
+    item = _param_itemsize(cfg)
+    kind = ("hybrid" if cfg.hybrid
+            else "ssm" if (cfg.ssm and cfg.attention == "none") else "attn")
+    total = 0
+    for layer in range(cfg.num_layers):
+        if kind in ("attn", "hybrid"):
+            w = min(cfg.window_for_layer(layer, smax), smax)
+            total += 2 * batch * w * cfg.num_kv_heads * cfg.head_dim * item
+            if w < smax:
+                total += w * F32            # ring write-cursor (w,) int32
+        if kind in ("ssm", "hybrid"):
+            total += _ssm_state_bytes(cfg, batch, item)
+    return total
+
+
+def paged_cache_bytes(cfg: ModelConfig, n_blocks: int, block_size: int,
+                      slots: int) -> int:
+    """Paged-pool bytes — what `serve.paged_cache.init_paged_cache`
+    allocates: per-layer K/V pools of ``n_blocks × block_size`` rows
+    (including the reserved trash block) plus slot-resident SSM state.
+    Peak KV HBM scales with the POOL, not ``slots × slot_tokens``."""
+    item = _param_itemsize(cfg)
+    kind = ("hybrid" if cfg.hybrid
+            else "ssm" if (cfg.ssm and cfg.attention == "none") else "attn")
+    total = 0
+    for _layer in range(cfg.num_layers):
+        if kind in ("attn", "hybrid"):
+            total += (2 * n_blocks * block_size * cfg.num_kv_heads
+                      * cfg.head_dim * item)
+        if kind in ("ssm", "hybrid"):
+            total += _ssm_state_bytes(cfg, slots, item)
+    return total

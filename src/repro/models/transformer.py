@@ -174,7 +174,8 @@ def _attn_full(p, h, cfg: ModelConfig, window, positions):
     return o, (k, v)
 
 
-def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache, positions=None):
+def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache, positions=None,
+                 block_table=None):
     """One-token attention with cache update.  h: (B, 1, d).
 
     ``pos`` is the scalar cache-slot index (padded coordinate: slot s holds
@@ -182,6 +183,12 @@ def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache, positions=None):
     per-sequence *real* positions ``pos − pad[i]`` for ragged left-padded
     batches — they drive RoPE and the attention mask, so a short prompt's
     RoPE phases and window are not shifted by its batchmates' padding.
+
+    ``block_table`` ((B, n_logical) int32, optional) switches the layer to
+    the PAGED cache layout (serve/paged_cache.py, DESIGN.md §15): ``cache``
+    then holds physical pools ``{"k","v"}: (n_phys, block, Hk, dh)`` shared
+    by all slots, the table maps a slot's logical block to a physical block
+    (−1 ⇒ unmapped), and ``pos`` is the per-slot (B,) write position.
     """
     B = h.shape[0]
     H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -205,6 +212,52 @@ def _attn_decode(p, h, cfg: ModelConfig, window, pos, cache, positions=None):
         cos, sin = rope(qpos, dh, cfg.rope_theta)
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
+    if block_table is not None:
+        if "pos" in cache:
+            raise ValueError(
+                "paged decode does not support ring (SWA) caches: the ring's "
+                "cache_pos is one (W,) vector shared across the batch, so "
+                "per-slot write positions have nowhere to live — serve "
+                "SWA/hybrid-SWA architectures through the static engine")
+        pool_k, pool_v = cache["k"], cache["v"]
+        bs_blk = pool_k.shape[1]
+        nlog = block_table.shape[1]
+        posv = pos if jnp.ndim(pos) else jnp.broadcast_to(pos, (B,))
+        bidx = jnp.arange(B, dtype=jnp.int32)
+        # write this step's K/V at each slot's own position.  Idle/retired
+        # slots (no mapped block) and positions past the mapped range are
+        # routed to the reserved trash block 0, which is never read
+        # unmasked — a frozen `done` slot can keep "writing" harmlessly.
+        blk_idx = posv // bs_blk
+        phys_w = jnp.where(blk_idx < nlog,
+                           block_table[bidx, jnp.minimum(blk_idx, nlog - 1)],
+                           0)
+        phys_w = jnp.maximum(phys_w, 0)
+        off_w = posv % bs_blk
+        ck = pool_k.at[phys_w, off_w].set(k[:, 0].astype(pool_k.dtype))
+        cv = pool_v.at[phys_w, off_w].set(v[:, 0].astype(pool_v.dtype))
+        # gather each slot's logical view (B, nlog·block, Hk, dh); unmapped
+        # blocks gather trash and are invalidated through kpos = −1, whose
+        # masked scores contribute exact float zeros (DESIGN.md §11) — so
+        # the softmax bits match a contiguous cache of the same length.
+        btc = jnp.maximum(block_table, 0)
+        gk = ck[btc].reshape(B, nlog * bs_blk, *ck.shape[2:])
+        gv = cv[btc].reshape(B, nlog * bs_blk, *cv.shape[2:])
+        kpad = jnp.arange(nlog * bs_blk, dtype=jnp.int32)
+        mapped = block_table[:, kpad // bs_blk] >= 0           # (B, S)
+        kpos = jnp.where(mapped & (kpad[None] <= posv[:, None]),
+                         kpad[None], -1)
+        o = attention(q, gk.astype(q.dtype), gv.astype(q.dtype), qpos, kpos,
+                      window=window, softcap=cfg.softcap_attn,
+                      block_kv=cfg.attn_block_kv)
+        o = linear(o.reshape(B, 1, H * dh), p["attn"]["wo"], cfg.linear_spec)
+        if cfg.post_norm:
+            o = rms_norm(o, p["norm_mix_post"], cfg.norm_eps)
+        return o, {"k": ck, "v": cv}
+    if jnp.ndim(pos):
+        raise ValueError("per-slot (B,) decode positions need block_table "
+                         "paging; the contiguous cache layout shares one "
+                         "scalar write position")
     if "pos" in cache:                     # ring buffer (SWA layer)
         ck, cv, cp = update_cache_ring(cache["k"], cache["v"], cache["pos"],
                                        k, v, pos)
@@ -436,11 +489,12 @@ def _cache_is_stacked(cache_col) -> bool:
 
 # -------------------------------------------------------------- decode step -
 def _layer_decode(p, h, cfg: ModelConfig, block_layer, window, pos, cache,
-                  positions=None):
+                  positions=None, block_table=None):
     kind = _mixer_kind(cfg)
     new_cache = {}
     if kind == "attn":
-        o, nc = _attn_decode(p, h, cfg, window, pos, cache, positions)
+        o, nc = _attn_decode(p, h, cfg, window, pos, cache, positions,
+                             block_table)
         new_cache.update(nc)
         h = h + o
     elif kind == "ssm":
@@ -453,7 +507,7 @@ def _layer_decode(p, h, cfg: ModelConfig, block_layer, window, pos, cache,
     else:
         oa, nc = _attn_decode(p, h, cfg, window, pos,
                               {k: v for k, v in cache.items() if k != "ssm"},
-                              positions)
+                              positions, block_table)
         x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
         os_, ns = ssm_decode_step(p["ssm"], x, cache["ssm"], cfg)
         new_cache.update(nc)
@@ -469,14 +523,26 @@ def _layer_decode(p, h, cfg: ModelConfig, block_layer, window, pos, cache,
     return h, new_cache
 
 
-def decode_step(cfg: ModelConfig, params, cache, batch, pos, positions=None):
+def decode_step(cfg: ModelConfig, params, cache, batch, pos, positions=None,
+                block_tables=None):
     """One decode step.  batch: {"tokens": (B, 1)} (or embeds); pos scalar.
 
     ``pos`` is the shared cache-slot index (the padded coordinate);
     ``positions`` (optional, (B,) int32) are per-sequence real positions for
     ragged left-padded batches (``pos − pad[i]``) — see `_attn_decode`.
+
+    ``block_tables`` ((B, n_logical) int32, optional) selects the paged
+    cache layout: ``cache`` holds physical K/V pools shared across slots and
+    ``pos`` becomes the per-slot (B,) write-position vector (the
+    continuous-batching scheduler's layout, DESIGN.md §15).  SSM state stays
+    slot-resident (O(1) per slot) and is indexed by batch row as usual.
     Returns (logits (B, vocab) f32, new_cache).
     """
+    pos = jnp.asarray(pos)
+    if jnp.ndim(pos) and positions is None:
+        # per-slot positions with no separate pad vector: slots are packed
+        # (scheduler slots carry no left-pad), so real position == pos.
+        positions = pos
     if cfg.frontend == "embeddings":
         h = batch["embeds"].astype(dtype_of(cfg))
     else:
@@ -496,7 +562,8 @@ def decode_step(cfg: ModelConfig, params, cache, batch, pos, positions=None):
             new_rows = {}
             for i in range(cfg.layers_per_block):
                 hh, nc = _layer_decode(blk[f"sub{i}"], hh, cfg, i, wrow[i],
-                                       pos, crow[f"sub{i}"], positions)
+                                       pos, crow[f"sub{i}"], positions,
+                                       block_tables)
                 new_rows[f"sub{i}"] = nc
             return hh, new_rows
 
@@ -515,7 +582,8 @@ def decode_step(cfg: ModelConfig, params, cache, batch, pos, positions=None):
                 c = col["per_block"][b] if not _cache_is_stacked(col) \
                     else jax.tree.map(lambda x: x[b], col)
                 h, nc = _layer_decode(blk[f"sub{i}"], h, cfg, i,
-                                      windows[b, i], pos, c, positions)
+                                      windows[b, i], pos, c, positions,
+                                      block_tables)
                 new_caches[f"sub{i}"]["per_block"].append(nc)
         for i in range(cfg.layers_per_block):
             col = cache[f"sub{i}"]

@@ -1,7 +1,9 @@
-"""Serving: the batched decode engine (DESIGN.md §11/§12).
+"""Serving: the static batched decode engine (DESIGN.md §11/§12) and the
+continuous-batching slot scheduler over the paged KV pool (DESIGN.md §15).
 
 Surface locked by `tests/test_api_surface.py`.
 """
 from .engine import Engine  # noqa: F401
+from .scheduler import Request, SlotScheduler  # noqa: F401
 
-__all__ = ["Engine"]
+__all__ = ["Engine", "Request", "SlotScheduler"]

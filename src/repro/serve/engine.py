@@ -1,12 +1,19 @@
 """Batched serving engine: mask-correct prefill + on-device scan decode.
 
-Continuous-batching-lite: requests are left-padded (right-aligned) to a
-common prefill length and a per-sequence validity mask — threaded through
-`models.transformer.prefill` as ``batch["pad"]`` — guarantees ragged prompts
-batch correctly: pad slots are invalid attention keys, per-sequence RoPE
-positions are ``arange(S) − pad[i]``, and SSM layers zero padded inputs, so
-greedy outputs are *batch-invariant* (bit-identical whether a prompt is
-served alone or alongside longer batchmates; `tests/test_serve.py`).
+This is the STATIC engine — pack-once/run-once: requests are left-padded
+(right-aligned) to a common prefill length, decoded together, and every
+sequence waits for the slowest batchmate while ``smax`` KV slots stay
+reserved per sequence.  It is the bit-reference and measured baseline;
+continuous batching — mid-flight admission into freed slots over a paged,
+prefix-shared KV pool — lives in `serve.scheduler.SlotScheduler`
+(DESIGN.md §15), which reuses this engine's prefill and weight encoding.
+
+Ragged prompts batch correctly through a per-sequence validity mask —
+threaded through `models.transformer.prefill` as ``batch["pad"]`` — so pad
+slots are invalid attention keys, per-sequence RoPE positions are
+``arange(S) − pad[i]``, and SSM layers zero padded inputs; greedy outputs
+are *batch-invariant* (bit-identical whether a prompt is served alone or
+alongside longer batchmates; `tests/test_serve.py`).
 
 Decode runs as ONE jitted `lax.scan` over the new-token axis: sampling, the
 per-sequence EOS/done mask, and the KV/SSM cache updates all live on device,
@@ -16,6 +23,12 @@ survives as ``engine="host"`` for A/B measurement (`benchmarks/
 decode_bench.py`) and equivalence testing; both paths share prefill /
 `decode_step`, so they emit identical greedy tokens.
 
+Compile-cache bounds: the decode scan is keyed on ``(max_new_tokens,
+eos_id)`` only — temperature and seed are traced operands — and the cache
+is a small LRU; prefill lengths are bucketed to powers of two (floor 8,
+rounded up to ``ssm_chunk`` where the stack needs it), so a ragged workload
+compiles a handful of prefill shapes, not one per prompt length.
+
 Sampling: greedy or temperature; deterministic under a fixed seed (the root
 key is split once before first use, then chain-split per step — the same
 chain in both engines).
@@ -23,6 +36,7 @@ chain in both engines).
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -35,12 +49,41 @@ from repro.models import transformer as T
 
 __all__ = ["Engine"]
 
+# decode-scan executables kept per engine: (max_new_tokens, eos_id) pairs.
+_SCAN_CACHE_MAX = 8
+
 
 def _sample(logits, temperature: float, key):
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(key, logits / temperature,
                                   axis=-1).astype(jnp.int32)
+
+
+def _sample_traced(logits, temperature, key):
+    """`_sample` with the temperature as a TRACED operand: t ≤ 0 selects
+    greedy via `where`, so one executable serves every temperature (the
+    divide uses a safe denominator on the greedy branch; for t > 0 the
+    scaled logits — and hence the sampled bits — match `_sample` exactly)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.asarray(temperature, jnp.float32)
+    scaled = logits / jnp.where(t > 0.0, t, 1.0)
+    sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(t > 0.0, sampled, greedy)
+
+
+def bucket_plen(cfg: ModelConfig, plen: int) -> int:
+    """Bucket a padded prompt length: next power of two (floor 8), then
+    rounded up to ``ssm_chunk`` where the stack requires chunk-aligned
+    prefill.  Extra pad slots are provably inert (DESIGN.md §11), so
+    bucketing changes compile-cache pressure, never tokens."""
+    b = 8
+    while b < plen:
+        b *= 2
+    if cfg.ssm or cfg.hybrid:
+        q = cfg.ssm_chunk
+        b = -(-b // q) * q
+    return b
 
 
 class Engine:
@@ -52,10 +95,28 @@ class Engine:
     DESIGN.md §12) — prefill and the decode scan then consume residues
     directly and perform zero weight quantizations / forward conversions per
     step, with greedy outputs bit-identical to the live-quantization path.
+
+    Fused-backend configs also warm the megakernel autotuner table for their
+    decode shapes at init (`kernels.tune.warm_for_config`): with the
+    committed table (`benchmarks/tune_table.json`) cold-start serving
+    performs zero on-device sweeps; ``self.tune_report`` records the
+    per-shape hits.
     """
 
-    def __init__(self, cfg: ModelConfig, params, smax: int = 2048):
+    def __init__(self, cfg: ModelConfig, params, smax: int = 2048,
+                 lanes: Optional[int] = None):
         self.cfg = cfg
+        # Decode-lane bucket: every packed batch is right-padded with fully-
+        # padded dummy rows to a multiple of ``lanes``.  XLA's reduction
+        # order inside a matmul depends on the operand SHAPES, so a prompt
+        # decoded at B=1 and the same prompt in a B=4 slot batch can differ
+        # in the last ulp — enough to flip a greedy argmax once amplified
+        # through the residue chain's round/clip boundaries.  Pinning the
+        # lane count makes greedy outputs batch-width-invariant by
+        # construction; the SlotScheduler sets ``lanes=slots`` so its solo
+        # bit-reference (`sched.engine.generate([prompt])`) runs the exact
+        # shapes of the slot chunk.
+        self.lanes = None if lanes is None else int(lanes)
         spec = cfg.linear_spec
         if spec.is_rns and spec.encode_weights:
             # Residue-resident configs (DESIGN.md §14) need the chained MLP's
@@ -75,26 +136,33 @@ class Engine:
             functools.partial(T.decode_step, cfg))
         self._prefill = jax.jit(
             functools.partial(T.prefill, cfg), static_argnames=("smax",))
-        self._scan_fns: Dict[Any, Any] = {}
+        self._scan_fns: "OrderedDict[Any, Any]" = OrderedDict()
+        self.prefill_shapes = set()          # distinct (B, plen) compiled
+        from repro.kernels import tune
+
+        self.tune_report = tune.warm_for_config(cfg)
 
     # ------------------------------------------------------------- batching -
     def _pack(self, prompts: List[List[int]]):
-        """Right-align (left-pad) ragged prompts to a common length.
+        """Right-align (left-pad) ragged prompts to a common BUCKETED length.
 
-        SSM/hybrid stacks additionally need the prefill length to be a
-        multiple of ``ssm_chunk`` (the chunked dual form's requirement) —
-        round up with extra pad; pad slots are provably inert.
+        The padded length is `bucket_plen`'s power-of-two bucket (floor 8),
+        rounded up to ``ssm_chunk`` for SSM/hybrid stacks (the chunked dual
+        form's requirement) — so a ragged workload compiles O(log smax)
+        prefill shapes instead of one per distinct prompt length.  Pad slots
+        are provably inert.
         """
         B = len(prompts)
-        plen = max(len(p) for p in prompts)
-        if self.cfg.ssm or self.cfg.hybrid:
-            q = self.cfg.ssm_chunk
-            plen = -(-plen // q) * q
-        toks = np.zeros((B, plen), np.int32)
-        pad = np.zeros((B,), np.int32)
+        L = B if self.lanes is None else self.lanes * (-(-B // self.lanes))
+        plen = bucket_plen(self.cfg, max(len(p) for p in prompts))
+        # dummy lanes (B..L) are FULLY padded: every key invalid, outputs
+        # never read — they exist only to pin the decode batch width.
+        toks = np.zeros((L, plen), np.int32)
+        pad = np.full((L,), plen, np.int32)
         for i, p in enumerate(prompts):
             toks[i, plen - len(p):] = p
             pad[i] = plen - len(p)
+        self.prefill_shapes.add((L, plen))
         return {"tokens": jnp.asarray(toks), "pad": jnp.asarray(pad)}, plen
 
     # ------------------------------------------------------------- generate -
@@ -115,13 +183,15 @@ class Engine:
             return self._generate_host(prompts, batch, plen, max_new_tokens,
                                        temperature, seed, eos_id)
         # prefill through the same jitted executable as the host path (one
-        # compile per batch shape, shared); only the decode scan is keyed on
-        # the (max_new_tokens, temperature, eos_id) triple.
+        # compile per batch shape, shared); the decode scan is keyed on
+        # (max_new_tokens, eos_id) only — temperature and seed ride along
+        # as traced operands.
         logits, cache, pos0 = self._prefill(self.params, batch,
                                             smax=self.smax)
-        run = self._scan_fn(max_new_tokens, temperature, eos_id)
+        run = self._scan_fn(max_new_tokens, eos_id)
         first, done0, toks, emit, _ = run(self.params, logits, cache,
-                                          batch["pad"], pos0, jnp.int32(seed))
+                                          batch["pad"], pos0, jnp.int32(seed),
+                                          jnp.float32(temperature))
         first = np.asarray(first)
         toks = np.asarray(toks)                       # (T-1, B)
         emit = np.asarray(emit)                       # (T-1, B) bool
@@ -134,17 +204,23 @@ class Engine:
         return out
 
     # ------------------------------------------------------------ scan path -
-    def _scan_fn(self, max_new_tokens: int, temperature: float,
-                 eos_id: Optional[int]):
-        key_ = (max_new_tokens, temperature, eos_id)
+    def _scan_fn(self, max_new_tokens: int, eos_id: Optional[int]):
+        """The decode-scan executable for (max_new_tokens, eos_id).
+
+        Temperature and seed are traced operands of the returned function —
+        serving sweeps over sampling parameters reuse ONE executable — and
+        the per-engine cache is a bounded LRU (oldest executable dropped
+        past `_SCAN_CACHE_MAX` keys)."""
+        key_ = (int(max_new_tokens), eos_id)
         if key_ in self._scan_fns:
+            self._scan_fns.move_to_end(key_)
             return self._scan_fns[key_]
         cfg = self.cfg
         eos = -1 if eos_id is None else int(eos_id)   # -1 never matches
 
-        def run(params, logits, cache, pad, pos0, seed):
+        def run(params, logits, cache, pad, pos0, seed, temperature):
             key, k0 = jax.random.split(jax.random.PRNGKey(seed))
-            first = _sample(logits, temperature, k0)
+            first = _sample_traced(logits, temperature, k0)
             done0 = first == eos
             if max_new_tokens <= 1:
                 zero = jnp.zeros((0, pad.shape[0]), jnp.int32)
@@ -163,7 +239,7 @@ class Engine:
                 logits, cache = T.decode_step(
                     cfg, params, cache, {"tokens": cur[:, None]}, t,
                     positions=t - pad)
-                nxt = _sample(logits, temperature, kt)
+                nxt = _sample_traced(logits, temperature, kt)
                 new_done = done | (nxt == eos)
                 # emit == "was not done at entry": EOS itself is emitted,
                 # everything after it is dropped host-side.
@@ -183,6 +259,8 @@ class Engine:
         # asserts the donation is warning-free, i.e. actually usable).
         fn = jax.jit(run, donate_argnums=(2,))
         self._scan_fns[key_] = fn
+        while len(self._scan_fns) > _SCAN_CACHE_MAX:
+            self._scan_fns.popitem(last=False)
         return fn
 
     # ------------------------------------------------------------ host path -

@@ -48,6 +48,8 @@ SURFACE = {
     ],
     "repro.serve": [
         "Engine",
+        "Request",
+        "SlotScheduler",
     ],
 }
 

@@ -32,6 +32,21 @@ def test_decode_rows_gate_downward():
                                              "tok/s")]
 
 
+def test_serving_rows_gate_downward():
+    """Serving rows are throughputs too: a sched tok/s cliff gates, a gain
+    never does (latency percentiles live in the note string, not the
+    value, so they can't be misread as a latency row)."""
+    prev = _payload([("serving_sched_smollm-135m_n12_L128S16", 4000.0)])
+    assert compare(
+        prev, _payload([("serving_sched_smollm-135m_n12_L128S16", 9000.0)]),
+        3.0) == []
+    regs = compare(
+        prev, _payload([("serving_sched_smollm-135m_n12_L128S16", 1000.0)]),
+        3.0)
+    assert [(r[0], r[3]) for r in regs] == [
+        ("serving_sched_smollm-135m_n12_L128S16", "tok/s")]
+
+
 def test_unmatched_rows_do_not_gate():
     prev = _payload([("rns_matmul_jnp_x", 100.0)])
     fresh = _payload([("rns_new_section_row", 1e9),

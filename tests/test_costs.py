@@ -125,3 +125,30 @@ def test_rns_weight_conversion_dropped_when_encoded():
     bf = dataclasses.replace(live, linear_backend="bf16")
     assert "flops_weight_conv" not in analytic_cost(
         bf, shp, n_pods=1, data=1, model=1).breakdown
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-1.3b", "hymba-1.5b",
+                                  "h2o-danube-1.8b", "gemma2-2b"])
+def test_decode_cache_bytes_exact(arch):
+    """The analytic static-reservation figure IS the allocation: byte-equal
+    to the real `init_cache` pytree across attention kinds (full, SSM,
+    hybrid, sliding-window ring, local/global mix)."""
+    from repro.launch.costs import decode_cache_bytes
+
+    cfg = get_smoke_config(arch)
+    cache = T.init_cache(cfg, 3, 32)
+    real = sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(cache))
+    assert decode_cache_bytes(cfg, 3, 32) == real
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-1.3b"])
+def test_paged_cache_bytes_exact(arch):
+    """Same exactness for the paged pool — the serving benchmark's
+    peak-HBM comparison rests on both figures being real allocations."""
+    from repro.launch.costs import paged_cache_bytes
+    from repro.serve.paged_cache import init_paged_cache, paged_cache_nbytes
+
+    cfg = get_smoke_config(arch)
+    cache = init_paged_cache(cfg, 7, 4, 2)
+    assert paged_cache_bytes(cfg, 7, 4, 2) == paged_cache_nbytes(cache)

@@ -137,12 +137,13 @@ def test_no_per_token_host_transfer_in_scan():
     contains a single lax.scan over the new-token axis and no host
     callbacks — tokens cross to the host once, at the end."""
     eng = _engine("smollm-135m")
-    run = eng._scan_fn(8, 0.0, None)
+    run = eng._scan_fn(8, None)
     import jax.numpy as jnp
     batch, _ = eng._pack(_prompts(eng.cfg, [4, 7]))
     logits, cache, pos0 = eng._prefill(eng.params, batch, smax=eng.smax)
     jaxpr = jax.make_jaxpr(lambda *a: run(*a))(
-        eng.params, logits, cache, batch["pad"], pos0, jnp.int32(0))
+        eng.params, logits, cache, batch["pad"], pos0, jnp.int32(0),
+        jnp.float32(0.0))
 
     def _prims(jx, acc):
         for eqn in jx.eqns:
@@ -186,8 +187,9 @@ def test_scan_cache_donation_usable_and_warning_free():
     import jax.numpy as jnp
     batch, _ = eng._pack(prompts)
     logits, cache, pos0 = eng._prefill(eng.params, batch, smax=eng.smax)
-    run = eng._scan_fn(6, 0.0, None)
-    run(eng.params, logits, cache, batch["pad"], pos0, jnp.int32(0))
+    run = eng._scan_fn(6, None)
+    run(eng.params, logits, cache, batch["pad"], pos0, jnp.int32(0),
+        jnp.float32(0.0))
     leaves = jax.tree.leaves(cache)
     assert leaves and all(leaf.is_deleted() for leaf in leaves)
 
@@ -262,6 +264,64 @@ def test_fused_engine_bit_identical_to_live():
     out_fused = Engine(cfg_fused, params, smax=32).generate(
         prompts, max_new_tokens=6)
     assert out_fused == out_live
+
+
+# --------------------------------------------- compile-cache bounds --------
+def test_scan_cache_keyed_on_shape_only_and_lru_bounded():
+    """The decode-scan cache is keyed ``(max_new_tokens, eos_id)`` ONLY:
+    temperature and seed are traced operands, so a sampling sweep reuses one
+    executable instead of compiling per temperature; and the cache is a
+    bounded LRU."""
+    from repro.serve.engine import _SCAN_CACHE_MAX
+
+    cfg = get_smoke_config("smollm-135m")
+    params = T.make_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, smax=64)
+    prompts = _prompts(cfg, [4, 9])
+    eng.generate(prompts, max_new_tokens=6)
+    assert len(eng._scan_fns) == 1
+    eng.generate(prompts, max_new_tokens=6, temperature=0.9, seed=7)
+    eng.generate(prompts, max_new_tokens=6, temperature=0.3, seed=1)
+    assert len(eng._scan_fns) == 1, "temperature/seed leaked into the key"
+    eng.generate(prompts, max_new_tokens=7)
+    assert len(eng._scan_fns) == 2
+    for t in range(8, 8 + _SCAN_CACHE_MAX + 3):
+        eng._scan_fn(t, None)
+    assert len(eng._scan_fns) == _SCAN_CACHE_MAX, "LRU bound not enforced"
+
+
+def test_prefill_lengths_bucketed_to_powers_of_two():
+    """A ragged workload compiles O(log smax) prefill shapes: prompt lengths
+    bucket to the next power of two (floor 8), so 3/5/8 share one compiled
+    shape and 9/13 share the next."""
+    cfg = get_smoke_config("smollm-135m")
+    params = T.make_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, smax=64)
+    for n in (3, 5, 8, 9, 13):
+        eng.generate(_prompts(cfg, [n], seed=n), max_new_tokens=2)
+    assert eng.prefill_shapes == {(1, 8), (1, 16)}
+
+
+def test_lane_bucket_pins_decode_batch_width():
+    """``lanes=L`` right-pads every packed batch with fully-padded dummy
+    rows to a multiple of L — the decode batch width (and hence XLA's
+    shape-dependent matmul reduction order) no longer varies with how many
+    prompts the caller happened to pass."""
+    import jax.numpy as jnp
+
+    cfg = get_smoke_config("smollm-135m")
+    params = T.make_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, smax=64, lanes=4)
+    p, q = _prompts(cfg, [4, 7])
+    batch, plen = eng._pack([p])
+    assert batch["tokens"].shape == (4, plen)
+    assert list(np.asarray(batch["pad"])[1:]) == [plen] * 3   # dummy lanes
+    # outputs slice back to the true batch, dummy lanes never surface
+    out = eng.generate([p, q], max_new_tokens=6)
+    assert [len(o) for o in out] == [len(p) + 6, len(q) + 6]
+    # the bit-invariance the bucket buys: solo == batched, decode width 4
+    assert eng.generate([p], max_new_tokens=6)[0] == out[0]
+    assert eng.prefill_shapes == {(4, jnp.shape(batch["tokens"])[1])}
 
 
 def test_encoded_engine_host_scan_parity():

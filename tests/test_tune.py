@@ -111,3 +111,94 @@ def test_fused_kernel_bit_identity_across_tilings(tune_cache):
                                         block_k=bk)).tobytes()
             for bm, bn, bk in [(8, 8, 32), (24, 24, 96), (16, 8, 48)]]
     assert outs[0] == outs[1] == outs[2]
+
+
+# ---------------------------------------------------------------------------
+# Zoo prepopulation (serving cold-start: DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def _no_sweep(monkeypatch):
+    def explode(M, K, N, C):
+        raise AssertionError(f"on-device sweep for M{M}xK{K}xN{N}/C{C} — "
+                             "cold start must be table-hit only")
+    monkeypatch.setattr(tune, "_default_sweep", explode)
+
+
+def test_prepopulate_covers_zoo_and_is_idempotent(tune_cache, monkeypatch):
+    """`--prepopulate` fills every decode shape of a fused arch (full +
+    smoke variants) and a second run writes nothing new."""
+    _no_sweep(monkeypatch)          # interpret path must not sweep either
+    n = tune.prepopulate(archs=["rns-smollm-135m-resident"])
+    assert n > 0
+    table = json.loads(tune_cache.read_text())
+    assert len(table) == n
+    assert tune.prepopulate(archs=["rns-smollm-135m-resident"]) == 0
+    # every entry is a concrete admissible tiling for its keyed shape
+    for key, blocks in table.items():
+        assert len(blocks) == 3 and all(b >= 1 for b in blocks), (key, blocks)
+
+
+def test_engine_init_zero_sweeps_against_committed_table(monkeypatch):
+    """Cold-start contract: with the committed benchmarks/tune_table.json
+    every shape `Engine.__init__` warms is a table HIT — no sweeps."""
+    import pathlib
+
+    import jax
+
+    from repro.configs.base import get_smoke_config
+
+    if jax.devices()[0].device_kind.replace(" ", "-") != "cpu":
+        pytest.skip("committed table is keyed per device kind")
+    committed = (pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+                 / "tune_table.json")
+    monkeypatch.setenv("RNS_TUNE_CACHE", str(committed))
+    tune.clear_memory_cache()
+    try:
+        _no_sweep(monkeypatch)
+        report = tune.warm_for_config(get_smoke_config(
+            "rns-smollm-135m-resident"))
+        assert report, "fused config enumerated no decode shapes"
+        misses = [r["key"] for r in report if not r["hit"]]
+        assert not misses, (
+            f"decode shapes missing from committed table: {misses} — "
+            "regenerate with `python -m repro.kernels.tune --prepopulate "
+            "--out benchmarks/tune_table.json`")
+    finally:
+        tune.clear_memory_cache()
+
+
+def test_decode_shapes_cover_real_decode_launches(tune_cache, monkeypatch):
+    """`decode_shapes_for` is not a guess: every `blocks_for` lookup a REAL
+    decode step performs on the fused-resident config is one of the
+    enumerated warm shapes, so a prepopulated table covers decode fully."""
+    import jax
+
+    from repro.configs.base import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serve import Engine
+
+    cfg = get_smoke_config("rns-smollm-135m-resident")
+    eng = Engine(cfg, T.make_params(cfg, jax.random.PRNGKey(0)), smax=32)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist() for n in (5, 9)]
+    batch, plen = eng._pack(prompts)
+    _, cache, pos0 = eng._prefill(eng.params, batch, smax=eng.smax)
+
+    seen = []
+    real = tune.blocks_for
+
+    def spy(M, K, N, C, **kw):
+        seen.append((kw.get("backend", "pallas_fused"), C, M, K, N,
+                     str(kw.get("dtype", "int8"))))
+        return real(M, K, N, C, **kw)
+
+    monkeypatch.setattr(tune, "blocks_for", spy)
+    step = {"tokens": jnp.zeros((2, 1), jnp.int32)
+            if "tokens" in batch else None}
+    T.decode_step(cfg, eng.params, cache, step, pos0)
+    assert seen, "decode step never consulted the autotuner"
+    warm = {(s["backend"], s["C"], s["M"], s["K"], s["N"], s["dtype"])
+            for s in tune.decode_shapes_for(cfg)}
+    stray = [c for c in seen if c not in warm]
+    assert not stray, f"decode launches outside the warmed shape set: {stray}"
