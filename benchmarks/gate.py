@@ -96,6 +96,19 @@ def main(argv=None) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"# gate FAIL: cannot read fresh {args.fresh}: {e}")
         return 1
+
+    # Schema gate (repro.analysis.schema): a malformed artifact fails here
+    # with the offending field named, not as a KeyError inside compare().
+    from repro.analysis.schema import validate_bench
+
+    bad = False
+    for label, payload in ((base_name, prev), (args.fresh, fresh)):
+        rep = validate_bench(payload, subject=label)
+        for f in rep.errors:
+            print(f"# gate FAIL: {label}: {f}")
+            bad = True
+    if bad:
+        return 1
     if prev.get("device") != fresh.get("device") \
             or bool(prev.get("smoke")) != bool(fresh.get("smoke")):
         print(f"# gate SKIP: baseline {base_name} is "

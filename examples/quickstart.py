@@ -115,3 +115,33 @@ y_chain = rns_chain_linear(up, wd, gate=gq, gate_scale=sg)  # ONE MRC exit
 print(f"chained GLU MLP through basis {chain_basis.moduli}: out "
       f"{y_chain.shape} — one activation encode, one reverse conversion "
       f"(config: rns-smollm-135m-resident, linear_domain='residue')")
+
+# --- 8. static analysis: prove the bounds instead of trusting them -----------
+# Everything above leaned on hand-derived dynamic-range constants (K·127²,
+# the chain's F·127³, the requantize clip).  repro.analysis (DESIGN.md §16)
+# re-derives them by exact interval propagation and rejects any
+# configuration whose proof fails — the same passes CI runs over the whole
+# config zoo via `PYTHONPATH=src python -m repro.analysis.lint --all-configs`
+# and `Engine(verify="static")` runs at serving init.
+import dataclasses
+
+from repro import analysis
+
+spec = analysis.PipelineSpec.for_basis(
+    chain_basis, k=F, x_bound=127, w_bound=127, residue_in=True, gate=True)
+report, stages = analysis.check_pipeline(spec)
+report.raise_if_failed()                  # §7's gated down-proj is proven
+print(f"bound pass proves the §7 chain: int32 accumulator ⊆ "
+      f"{stages['accumulator']}, gated product ⊆ {stages['value']}, "
+      f"M = {chain_basis.M} covers it — clean")
+
+# ...and a deliberately broken spec: gating AND emitting residues would need
+# a K·127³-sized requantize bound, so the analyzer refuses it statically —
+# the same refusal rns_chain_linear raises at runtime.
+bad = dataclasses.replace(spec, emit="residues", label="gate+emit")
+bad_report, _ = analysis.check_pipeline(bad)
+try:
+    bad_report.raise_if_failed()
+    raise AssertionError("analyzer accepted a known-bad spec")
+except analysis.AnalysisError as e:
+    print(f"bound pass rejects gate+emit as designed:\n  {e}")

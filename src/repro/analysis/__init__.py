@@ -1,0 +1,91 @@
+"""`repro.analysis` — static analysis for the RNS pipeline (DESIGN.md §16).
+
+Three passes, one vocabulary:
+
+  * **bounds** — exact interval derivation of every dynamic-range constant
+    (accumulators, fold rungs, MRC limbs, requant clips) for a (basis, K,
+    operand-bound, variant) configuration, plus a jaxpr-level interval
+    interpreter (`absint`) for traced computations;
+  * **residency** — structural jaxpr invariants (no modular reduction
+    outside ``pallas_call``, exactly-N kernel launches, no host callbacks);
+  * **admissibility** — launch geometry vs the VMEM budget, SMEM-table
+    moduli limits, committed tune-table rows; `schema` validates the
+    committed JSON artifacts the runtime trusts.
+
+Entry points: :func:`assert_clean` (tests / fixtures),
+:func:`lint.check_config` (``Engine(verify="static")``), and the CLI
+``python -m repro.analysis.lint --all-configs`` (CI).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .absint import check_fn_bounds, interpret
+from .admissibility import (check_basis_tables, check_config_launches,
+                            check_launch, check_tune_table)
+from .bounds import (PipelineSpec, check_channel_plan, check_pipeline,
+                     pipeline_specs_for)
+from .findings import AnalysisError, Finding, Report, merged
+from .intervals import TOP, Interval, dtype_range
+from .lint import check_config
+from .residency import (JaxprSummary, check_no_callbacks, check_pallas_count,
+                        check_resident, summarize, summarize_fn)
+from .schema import (validate_bench, validate_bench_file, validate_tune_table,
+                     validate_tune_table_file)
+
+__all__ = [
+    "AnalysisError", "Finding", "Report", "merged",
+    "Interval", "TOP", "dtype_range",
+    "PipelineSpec", "check_pipeline", "check_channel_plan",
+    "pipeline_specs_for",
+    "check_fn_bounds", "interpret",
+    "JaxprSummary", "summarize", "summarize_fn", "check_resident",
+    "check_pallas_count", "check_no_callbacks",
+    "check_launch", "check_basis_tables", "check_tune_table",
+    "check_config_launches",
+    "validate_bench", "validate_bench_file", "validate_tune_table",
+    "validate_tune_table_file",
+    "check_config", "assert_clean",
+]
+
+
+def assert_clean(fn, spec, *example_args,
+                 resident: Optional[bool] = None,
+                 expect_pallas_calls: Optional[int] = None,
+                 require_scan: bool = False,
+                 subject: str = "assert_clean", **example_kwargs) -> Report:
+    """One-call static gate for a traced computation + its configuration.
+
+    ``spec`` drives the bound pass: a :class:`PipelineSpec` is checked
+    directly; a ``ModelConfig`` expands to every pipeline its decode path
+    launches; ``None`` skips bounds.  ``fn`` (with example args) is traced
+    once and the residency pass runs over the jaxpr: callbacks always,
+    residency when ``resident`` (default: True for residue-domain specs),
+    exact launch count when ``expect_pallas_calls`` is given.  Raises
+    :class:`AnalysisError` listing every violated invariant; returns the
+    full report (warnings included) when clean.
+    """
+    reports = []
+
+    if spec is not None:
+        if isinstance(spec, PipelineSpec):
+            pipeline_specs = [spec]
+        else:                               # ModelConfig-like
+            pipeline_specs = list(pipeline_specs_for(spec))
+        for ps in pipeline_specs:
+            reports.append(check_pipeline(ps)[0])
+            reports.append(check_basis_tables(ps.moduli, subject=ps.label))
+        if resident is None:
+            resident = any(ps.residue_in for ps in pipeline_specs)
+
+    if fn is not None:
+        summ = summarize_fn(fn, *example_args, **example_kwargs)
+        reports.append(check_no_callbacks(summ, require_scan=require_scan,
+                                          subject=subject))
+        if resident:
+            reports.append(check_resident(summ, subject=subject))
+        if expect_pallas_calls is not None:
+            reports.append(check_pallas_count(summ, expect_pallas_calls,
+                                              subject=subject))
+
+    return merged(subject, reports).raise_if_failed()

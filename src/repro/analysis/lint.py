@@ -1,0 +1,164 @@
+"""`python -m repro.analysis.lint` — static analysis over the config zoo.
+
+Runs the bound and admissibility passes over every (full + smoke) config in
+the registry and the schema + admissibility passes over the committed
+artifacts (``benchmarks/tune_table.json``, ``BENCH_<n>.json``), printing one
+summary line per subject and every error finding.  Exit 1 iff any pass
+proved a violation; warnings (unprovable properties) never fail the run but
+print under ``-v``.
+
+The jaxpr-level passes (residency, absint) need a traced computation, which
+needs params — too slow for a lint of the whole zoo — so they run in the
+test suite (`tests/test_analysis.py`, the replaced spies) and behind
+``Engine(verify="static")`` instead; ``--jaxpr ARCH`` opts one smoke config
+in here for local use.
+
+Usage:
+    python -m repro.analysis.lint --all-configs
+    python -m repro.analysis.lint --configs rns-smollm-135m-resident -v
+    python -m repro.analysis.lint --jaxpr rns-smollm-135m-resident
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import sys
+from typing import List
+
+from .findings import Report, merged
+
+__all__ = ["check_config", "lint_arch", "main"]
+
+
+def check_config(cfg) -> Report:
+    """Bound + admissibility passes over ONE ModelConfig instance.
+
+    This is the checker `Engine(verify="static")` runs at init: every
+    pipeline configuration the config's decode path launches is re-derived
+    and proven (accumulators, fold ladders, dynamic range, MRC limbs,
+    requant exactness), every launch tiling and basis table admitted.
+    """
+    from . import admissibility, bounds
+
+    reports: List[Report] = []
+    for ps in bounds.pipeline_specs_for(cfg):
+        reports.append(bounds.check_pipeline(ps)[0])
+        reports.append(admissibility.check_basis_tables(
+            ps.moduli, subject=ps.label))
+    reports.append(admissibility.check_config_launches(cfg))
+    return merged(f"config:{cfg.name}", reports)
+
+
+def lint_arch(name: str) -> List[Report]:
+    """Reports for an arch's full AND smoke config."""
+    from repro.configs.base import get_config, get_smoke_config
+
+    out = []
+    for tag, cfg in (("", get_config(name)), (":smoke",
+                                              get_smoke_config(name))):
+        rep = check_config(cfg)
+        rep.subject = f"{name}{tag}"
+        out.append(rep)
+    return out
+
+
+def _lint_artifacts(tune_table: str, bench_glob: str) -> List[Report]:
+    from . import admissibility, schema
+
+    out: List[Report] = []
+    if os.path.exists(tune_table):
+        rep = schema.validate_tune_table_file(tune_table)
+        if rep.ok:
+            import json
+
+            table = json.loads(open(tune_table).read())
+            rep.extend(admissibility.check_tune_table(table))
+        out.append(rep)
+    for path in sorted(glob.glob(bench_glob)):
+        out.append(schema.validate_bench_file(path))
+    return out
+
+
+def _lint_jaxpr(name: str) -> Report:
+    """Trace the smoke config's decode step and run the jaxpr passes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serve.engine import Engine
+
+    from . import residency
+
+    cfg = get_smoke_config(name)
+    params = T.make_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, smax=32)
+    batch, plen = eng._pack([[1, 2, 3], [4, 5]])
+    _, cache, _ = eng._prefill(eng.params, batch, smax=eng.smax)
+    summ = residency.summarize_fn(
+        lambda p, c, t, pos: T.decode_step(
+            cfg, p, c, {"tokens": t}, jnp.int32(plen), positions=pos),
+        eng.params, cache, jnp.zeros((2, 1), jnp.int32),
+        jnp.zeros((2,), jnp.int32))
+    reports = [residency.check_no_callbacks(summ, subject=name)]
+    if cfg.linear_spec.is_rns and cfg.linear_spec.domain == "residue":
+        reports.append(residency.check_resident(summ, subject=name))
+    return merged(f"jaxpr:{name}", reports)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static bound/admissibility/schema analysis of the "
+                    "RNS pipeline")
+    ap.add_argument("--all-configs", action="store_true",
+                    help="lint every arch in the registry (full + smoke)")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated arch names to lint")
+    ap.add_argument("--jaxpr", default=None, metavar="ARCH",
+                    help="also trace ARCH's smoke decode step and run the "
+                         "residency pass (slow: builds params)")
+    ap.add_argument("--tune-table", default="benchmarks/tune_table.json",
+                    help="committed tune table to validate")
+    ap.add_argument("--bench-glob", default="BENCH_*.json",
+                    help="glob of committed benchmark artifacts to validate")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print warning findings")
+    args = ap.parse_args(argv)
+
+    names: List[str] = []
+    if args.all_configs:
+        from repro.configs.base import list_archs
+
+        names = sorted(list_archs())
+    elif args.configs:
+        names = [n.strip() for n in args.configs.split(",") if n.strip()]
+
+    reports: List[Report] = []
+    for name in names:
+        reports.extend(lint_arch(name))
+    reports.extend(_lint_artifacts(args.tune_table, args.bench_glob))
+    if args.jaxpr:
+        reports.append(_lint_jaxpr(args.jaxpr))
+    if not reports:
+        ap.print_help()
+        return 2
+
+    n_err = n_warn = 0
+    for rep in reports:
+        print(f"# {rep.summary()}")
+        for f in rep.errors:
+            print(f"    {f}")
+        if args.verbose:
+            for f in rep.warnings:
+                print(f"    {f}")
+        n_err += len(rep.errors)
+        n_warn += len(rep.warnings)
+    print(f"# lint: {len(reports)} subjects, {n_err} errors, "
+          f"{n_warn} warnings")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,8 +27,6 @@ from __future__ import annotations
 import dataclasses
 from typing import List
 
-import numpy as np
-
 from .twit import Modulus
 
 __all__ = [

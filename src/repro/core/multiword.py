@@ -15,8 +15,6 @@ in numpy (oracle) and jax.numpy (datapath).
 """
 from __future__ import annotations
 
-from typing import Sequence
-
 import numpy as np
 
 __all__ = [

@@ -18,7 +18,6 @@ for self-quantized tensors (`rns_tensor.encode`), 128 for external int8
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 __all__ = ["quantize_int8", "quant_scale", "dequantize", "requant_scale",

@@ -32,7 +32,8 @@ from typing import Callable, Optional, Sequence, Tuple
 
 __all__ = ["DEFAULT_BLOCKS", "CANDIDATES", "DECODE_CANDIDATES", "blocks_for",
            "cache_path", "clear_memory_cache", "vmem_footprint",
-           "decode_shapes_for", "warm_for_config", "prepopulate"]
+           "decode_shapes_for", "warm_for_config", "prepopulate",
+           "shape_key", "parse_shape_key"]
 
 Blocks = Tuple[int, int, int]
 
@@ -142,6 +143,45 @@ def _shape_key(M: int, K: int, N: int, C: int, dtype: str,
     # generation must not be a key hit on another (different VMEM/MXU).
     kind = jax.devices()[0].device_kind.replace(" ", "-")
     return f"{backend}/{kind}/{dtype}/C{C}/M{M}xK{K}xN{N}"
+
+
+def shape_key(M: int, K: int, N: int, C: int, dtype: str = "int8",
+              backend: str = "pallas_fused") -> str:
+    """The table key `blocks_for` looks up for this launch (public form)."""
+    return _shape_key(M, K, N, C, dtype, backend)
+
+
+def parse_shape_key(key: str) -> dict:
+    """Invert the table-key format ``backend/device/dtype/C{C}/M{M}xK{K}xN{N}``.
+
+    Returns ``{backend, device, dtype, C, M, K, N, x_channels, emit}`` —
+    the variant flags are decoded from the backend suffix (`_res` streams a
+    (C, bm, bk) residue activation, `_emit` writes the (C, bm, bn) residue
+    output tile), which is what sizes the VMEM admissibility filter.
+    Raises ``ValueError`` naming the malformed segment.
+    """
+    parts = key.split("/")
+    if len(parts) != 5:
+        raise ValueError(f"tune-table key {key!r}: expected 5 segments "
+                         f"backend/device/dtype/C.../M...xK...xN..., "
+                         f"got {len(parts)}")
+    backend, device, dtype, c_part, shape_part = parts
+    if not c_part.startswith("C") or not c_part[1:].isdigit():
+        raise ValueError(f"tune-table key {key!r}: channel segment "
+                         f"{c_part!r} is not of the form C<int>")
+    import re
+
+    m = re.fullmatch(r"M(\d+)xK(\d+)xN(\d+)", shape_part)
+    if m is None:
+        raise ValueError(f"tune-table key {key!r}: shape segment "
+                         f"{shape_part!r} is not of the form M<i>xK<i>xN<i>")
+    return {
+        "backend": backend, "device": device, "dtype": dtype,
+        "C": int(c_part[1:]),
+        "M": int(m.group(1)), "K": int(m.group(2)), "N": int(m.group(3)),
+        "x_channels": "_res" in backend,
+        "emit": "_emit" in backend,
+    }
 
 
 def _default_sweep(M: int, K: int, N: int, C: int) -> Callable[[Blocks],

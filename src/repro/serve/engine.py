@@ -104,7 +104,16 @@ class Engine:
     """
 
     def __init__(self, cfg: ModelConfig, params, smax: int = 2048,
-                 lanes: Optional[int] = None):
+                 lanes: Optional[int] = None, verify: Optional[str] = None):
+        if verify not in (None, "static"):
+            raise ValueError(f"verify={verify!r}: expected None or 'static'")
+        if verify == "static":
+            # Opt-in static gate (DESIGN.md §16): re-derive and prove every
+            # bound/launch this config's decode path relies on before any
+            # weight is encoded; raises AnalysisError naming the violation.
+            from repro.analysis import check_config
+
+            check_config(cfg).raise_if_failed()
         self.cfg = cfg
         # Decode-lane bucket: every packed batch is right-padded with fully-
         # padded dummy rows to a multiple of ``lanes``.  XLA's reduction

@@ -1,7 +1,19 @@
 import os
 import sys
 
+import pytest
+
 # tests run with `PYTHONPATH=src pytest tests/`; this mirror makes bare
 # `pytest` work too.  NOTE: no XLA_FLAGS here — smoke tests must see the
 # real (1-CPU) device count; only launch/dryrun.py forces 512 devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def analysis():
+    """The static-analysis API (DESIGN.md §16): tests assert structural
+    jaxpr/bound invariants via ``analysis.assert_clean(fn, spec, *args)``
+    and the pass-level helpers instead of hand-rolled jaxpr spies."""
+    import repro.analysis as _analysis
+
+    return _analysis

@@ -1,0 +1,304 @@
+"""The static-analysis layer: adversarial corpus + tightness pins.
+
+Every pass must REJECT at least one known-bad input with a message naming
+the violated bound/invariant (the ISSUE-8 acceptance criterion), and the
+bound checker's derived intervals must be TIGHT — equal to the exact
+saturated-corner values the kernel tests already pin — not merely sound.
+The known-bad corpus is the repo's own bug history: the pre-PR-3 signed
+−128 regime, an undersized chain basis at large d_ff, and the gate+emit
+launch PR 6 refuses at runtime.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.analysis as analysis
+from repro.analysis import (AnalysisError, Interval, PipelineSpec,
+                            check_channel_plan, check_pipeline)
+from repro.core.channel_plan import ChannelPlan
+from repro.core.folding import INT32_SAFE
+from repro.core.rns import basis_for_chain, basis_for_int8_matmul
+
+
+def _messages(report):
+    return " | ".join(str(f) for f in report.findings)
+
+
+# ===================================================== bounds: known-bad ====
+def test_bounds_flags_pre_pr3_signed_128_regime():
+    """The PR-3 bug, reconstructed: a fold plan sized for self-quantized
+    ±127 operands is UNDERSIZED when external int8 reaches −128 — the pass
+    must say so, naming the understated bound."""
+    mods = basis_for_int8_matmul(64).moduli
+    k = 64
+    pre_pr3 = ChannelPlan.build(mods, bound=k * 127 * max(m - 1
+                                                          for m in mods),
+                                signed=True)
+    derived = k * 128 * max(m - 1 for m in mods)
+    rep, _ = check_channel_plan(pre_pr3, operand_bound=derived)
+    assert not rep.ok
+    assert "undersized" in _messages(rep)
+    # and the CORRECT plan (the runtime's for_matmul constant) is clean
+    fixed = ChannelPlan.for_matmul(mods, k, signed=True)
+    rep_ok, _ = check_channel_plan(fixed, operand_bound=derived)
+    assert rep_ok.ok, _messages(rep_ok)
+
+
+def test_bounds_flags_undersized_chain_basis_at_large_dff():
+    """A basis sized for the K·128² dense bound cannot hold the gated
+    three-factor chain product at d_ff scale: dynamic range deficit, with
+    the required M named."""
+    F = 1536
+    small = basis_for_int8_matmul(F)          # sized K·128², not K·128³
+    spec = PipelineSpec.for_basis(small, F, x_bound=127, w_bound=127,
+                                  residue_in=True, gate=True,
+                                  label="undersized-chain")
+    rep, _ = check_pipeline(spec)
+    assert not rep.ok
+    msg = _messages(rep)
+    assert "dynamic range deficit" in msg and "basis_for_chain" in msg
+    # the correctly-sized chain basis passes the same configuration
+    ok_spec = PipelineSpec.for_basis(basis_for_chain(F), F, x_bound=127,
+                                     w_bound=127, residue_in=True, gate=True)
+    rep_ok, _ = check_pipeline(ok_spec)
+    assert rep_ok.ok, _messages(rep_ok)
+
+
+def test_bounds_flags_gate_plus_emit():
+    """The PR-6 runtime refusal, proven statically: gate+emit would need a
+    K·127³-sized requantize bound, so emit='residues' cannot be range-exact
+    on a gated launch."""
+    spec = PipelineSpec.for_basis(basis_for_chain(192), 192, x_bound=127,
+                                  w_bound=127, residue_in=True, gate=True,
+                                  emit="residues")
+    rep, _ = check_pipeline(spec)
+    assert not rep.ok
+    assert "K·127³" in _messages(rep)
+
+
+def test_bounds_flags_int32_accumulator_overflow_naming_channel_and_k():
+    """An oversized K overflows the widest channel's int32 accumulator; the
+    message names the channel and the K."""
+    k = 200_000
+    spec = PipelineSpec(moduli=(127, 1021), k=k, x_bound=128)
+    rep, _ = check_pipeline(spec)
+    assert not rep.ok
+    msg = _messages(rep)
+    assert "channel m=1021" in msg and f"K={k}" in msg
+    assert "overflow" in msg
+
+
+# ==================================================== bounds: tightness ====
+def test_bounds_value_interval_matches_kernel_saturated_corner():
+    """stages['value'] is EXACT: K·128·128 — the same corner
+    test_kernels.py pins the fused kernel's integer output to."""
+    k = 64
+    spec = PipelineSpec.for_basis(basis_for_int8_matmul(k), k)
+    rep, stages = check_pipeline(spec)
+    assert rep.ok, _messages(rep)
+    assert stages["value"] == Interval.symmetric(k * 128 * 128)
+
+
+def test_bounds_accumulator_interval_matches_plan_bound():
+    """The derived per-channel accumulator bound equals the runtime's
+    hand-written ChannelPlan constant on both datapaths (signed broadcast
+    and residue-in unsigned) — derivation and constant agree exactly."""
+    mods = basis_for_int8_matmul(96).moduli
+    k = 96
+    signed = PipelineSpec(moduli=mods, k=k, x_bound=128)
+    _, st = check_pipeline(signed)
+    assert st["accumulator"].max_abs == ChannelPlan.for_matmul(
+        mods, k, signed=True).bound
+    unsigned = PipelineSpec(moduli=mods, k=k, x_bound=127, w_bound=127,
+                            residue_in=True)
+    _, st2 = check_pipeline(unsigned)
+    assert st2["accumulator"].hi == ChannelPlan.for_matmul(
+        mods, k, signed=False).bound
+
+
+def test_bounds_requant_interval_is_exact_at_corner():
+    """The emit='residues' clip is range-exact at ±127 operands: the
+    pre-clip |q'| bound is exactly 127 — the corner
+    test_chain.py::test_emit_requant_saturated_corner hits."""
+    spec = PipelineSpec.for_basis(basis_for_chain(192), 192, x_bound=127,
+                                  w_bound=127, residue_in=True,
+                                  emit="residues")
+    rep, stages = check_pipeline(spec)
+    assert rep.ok, _messages(rep)
+    assert stages["requant"] == Interval.symmetric(127)
+
+
+def test_fold_ladder_replay_is_int32_safe_for_zoo_plans():
+    """Replaying every rung of the runtime's fold schedules over exact
+    intervals stays inside int32 and canonicalizes within n_sub subtracts
+    for the dense and chain bases of the committed zoo shapes."""
+    for k in (64, 576, 1536):
+        for signed in (True, False):
+            plan = ChannelPlan.for_matmul(basis_for_int8_matmul(k).moduli,
+                                          k, signed=signed)
+            rep, finals = check_channel_plan(plan)
+            assert rep.ok, _messages(rep)
+            for m, iv in finals.items():
+                assert iv.hi < (plan.n_sub + 1) * m
+
+
+# ====================================================== absint (jaxpr) =====
+def test_absint_proves_mod_pipeline_and_flags_narrowing():
+    def resid(x, w):
+        mods = jnp.array([251, 509], jnp.int32)[:, None, None]
+        acc = jnp.einsum("mk,kn->mn", x.astype(jnp.int32),
+                         w.astype(jnp.int32))
+        return jnp.mod(acc[None], mods)
+
+    res = analysis.check_fn_bounds(
+        resid, jnp.zeros((4, 64), jnp.int8), jnp.zeros((64, 8), jnp.int8))
+    assert res.report.ok, _messages(res.report)
+    assert res.unproven == 0
+    (out,) = res.out_intervals
+    assert not out.is_top and out.max_abs < 2 * 509
+
+    # a downcast that can wrap is an error naming the dtype
+    def bad(x):
+        return (x.astype(jnp.int32) * 300).astype(jnp.int8)
+
+    res2 = analysis.check_fn_bounds(bad, jnp.zeros((4,), jnp.int8))
+    assert not res2.report.ok
+    assert "int8 overflow" in _messages(res2.report)
+
+
+# ========================================================== residency ======
+def test_residency_flags_stray_mod_and_vacuous_proof():
+    """A 'resident' trace with a host-side jnp.mod and no pallas_call at
+    all violates both residency clauses."""
+    summ = analysis.summarize_fn(lambda x: jnp.mod(x, 7),
+                                 jnp.arange(8, dtype=jnp.int32))
+    rep = analysis.check_resident(summ, subject="leaky")
+    assert not rep.ok
+    msg = _messages(rep)
+    assert "outside" in msg and "pallas_call" in msg
+    assert "vacuous" in msg
+
+
+def test_residency_flags_host_callback():
+    def chatty(x):
+        jax.debug.print("x={x}", x=x.sum())
+        return x + 1
+
+    summ = analysis.summarize_fn(chatty, jnp.zeros((4,), jnp.float32))
+    rep = analysis.check_no_callbacks(summ, subject="chatty")
+    assert not rep.ok
+    assert "callback" in _messages(rep)
+
+
+def test_residency_pallas_count_mismatch_is_flagged():
+    summ = analysis.summarize_fn(lambda x: x * 2,
+                                 jnp.zeros((4,), jnp.float32))
+    rep = analysis.check_pallas_count(summ, 1, subject="no-kernel")
+    assert not rep.ok
+    assert "expected exactly 1" in _messages(rep)
+
+
+def test_assert_clean_raises_with_named_findings():
+    with pytest.raises(AnalysisError, match="pallas_call"):
+        analysis.assert_clean(lambda x: jnp.mod(x, 5), None,
+                              jnp.arange(4, dtype=jnp.int32),
+                              resident=True)
+
+
+# ======================================================= admissibility =====
+def test_admissibility_flags_vmem_blowout_and_wide_modulus():
+    rep = analysis.check_launch(4096, 4096, 4096, 12, (1024, 1024, 2048),
+                                x_channels=True, emit=True)
+    assert not rep.ok
+    assert "VMEM footprint" in _messages(rep)
+
+    rep2 = analysis.check_basis_tables([(1 << 16) + 1], subject="wide")
+    assert not rep2.ok
+    assert "SMEM Horner" in _messages(rep2)
+
+
+def test_admissibility_flags_bad_tune_table_rows():
+    table = {
+        "pallas_fused/cpu/int8/C5/M8xK64xN64": [8, 64, 64],        # fine
+        "not-a-key": [1, 2, 3],                                    # bad key
+        "pallas_fused/cpu/int8/C5/M8xK64xN32": [8, 64],            # bad row
+        "pallas_fused_res_emit/cpu/int8/C12/M4096xK4096xN4096":
+            [1024, 1024, 2048],                                    # VMEM
+    }
+    rep = analysis.check_tune_table(table)
+    msg = _messages(rep)
+    assert "not-a-key" in msg
+    assert "[bm, bn, bk]" in msg
+    assert "VMEM footprint" in msg
+    assert len(rep.errors) == 3
+
+
+def test_admissibility_committed_tune_table_is_clean():
+    import json
+    from pathlib import Path
+
+    path = Path(__file__).resolve().parents[1] / "benchmarks" \
+        / "tune_table.json"
+    table = json.loads(path.read_text())
+    rep = analysis.check_tune_table(table)
+    assert rep.ok, _messages(rep)
+
+
+# ============================================================== schema ======
+def test_schema_names_the_malformed_field():
+    payload = {"bench": 9, "commit": "c", "device": "cpu", "failures": [],
+               "smoke": False, "timestamp": "t",
+               "rows": [{"name": "decode_x", "value": "fast"},
+                        {"name": "decode_x", "value": 1.0}]}
+    rep = analysis.validate_bench(payload)
+    msg = _messages(rep)
+    assert "rows[0].value" in msg
+    assert "duplicate row name" in msg
+
+    missing = dict(payload, rows=[])
+    del missing["device"]
+    rep2 = analysis.validate_bench(missing)
+    assert any(f.where == "device" for f in rep2.errors)
+
+    rep3 = analysis.validate_tune_table({"a/b": [1, 2, 3],
+                                         "x/y/z/C4/M1xK2xN3": [1, 0, 3]})
+    assert len(rep3.errors) == 2
+
+
+# ===================================================== zoo + engine gate ====
+def test_lint_passes_on_committed_zoo():
+    """Every registered arch's full+smoke config is provably clean — the
+    same invocation CI runs (`python -m repro.analysis.lint --all-configs`),
+    minus the artifact globs."""
+    from repro.analysis.lint import lint_arch
+    from repro.configs.base import list_archs
+
+    for name in list_archs():
+        for rep in lint_arch(name):
+            assert rep.ok, _messages(rep)
+
+
+def test_engine_verify_static_accepts_zoo_and_rejects_garbage():
+    from repro.configs.base import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serve.engine import Engine
+
+    cfg = get_smoke_config("rns-smollm-135m-resident")
+    params = T.make_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, smax=32, verify="static")
+    assert eng.cfg is cfg
+    with pytest.raises(ValueError, match="verify"):
+        Engine(cfg, params, smax=32, verify="dynamic")
+
+
+def test_interval_arithmetic_is_exact():
+    a = Interval.symmetric(3)
+    b = Interval(2, 5)
+    assert a * b == Interval(-15, 15)
+    assert a.dot(b, 10) == Interval(-150, 150)
+    assert Interval(-7, 12).abs() == Interval(0, 12)
+    assert Interval(0, 100).rung(4, 3) == Interval(0, 15 + 6 * 3)
+    assert Interval.canonical(37).mod(37) == Interval(0, 36)
+    assert analysis.TOP + a == analysis.TOP
+    with pytest.raises(ValueError):
+        Interval(5, 2)

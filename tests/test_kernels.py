@@ -176,7 +176,7 @@ def test_fused_dense_seed_golden_regression():
     assert yi.astype(np.int64).tolist() == _GOLDEN_INT
 
 
-def test_fused_single_pallas_call_jaxpr():
+def test_fused_single_pallas_call_jaxpr(analysis):
     """The acceptance contract: the WHOLE quantize → forward → matmul →
     fold → reverse → dequant rns_dense pipeline lowers to exactly ONE
     pallas_call (the staged backend lowers to three)."""
@@ -184,12 +184,10 @@ def test_fused_single_pallas_call_jaxpr():
 
     x = jnp.ones((6, 96), jnp.float32)
     w = jnp.ones((96, 10), jnp.float32)
-    fused = str(jax.make_jaxpr(
-        lambda a, b: rns_dense(a, b, "pallas_fused"))(x, w))
-    staged = str(jax.make_jaxpr(
-        lambda a, b: rns_dense(a, b, "pallas"))(x, w))
-    assert fused.count("pallas_call") == 1
-    assert staged.count("pallas_call") == 3
+    analysis.assert_clean(lambda a, b: rns_dense(a, b, "pallas_fused"), None,
+                          x, w, expect_pallas_calls=1, subject="fused")
+    analysis.assert_clean(lambda a, b: rns_dense(a, b, "pallas"), None,
+                          x, w, expect_pallas_calls=3, subject="staged")
 
 
 def test_fused_scale_epilogue_parity():

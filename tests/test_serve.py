@@ -132,7 +132,7 @@ def test_padded_prefill_matches_unpadded_prefill():
     assert np.array_equal(np.asarray(lg1), np.asarray(lg2))
 
 
-def test_no_per_token_host_transfer_in_scan():
+def test_no_per_token_host_transfer_in_scan(analysis):
     """The scan engine's decode is ONE compiled computation: its jaxpr
     contains a single lax.scan over the new-token axis and no host
     callbacks — tokens cross to the host once, at the end."""
@@ -141,23 +141,12 @@ def test_no_per_token_host_transfer_in_scan():
     import jax.numpy as jnp
     batch, _ = eng._pack(_prompts(eng.cfg, [4, 7]))
     logits, cache, pos0 = eng._prefill(eng.params, batch, smax=eng.smax)
-    jaxpr = jax.make_jaxpr(lambda *a: run(*a))(
+    summary = analysis.summarize_fn(
+        lambda *a: run(*a),
         eng.params, logits, cache, batch["pad"], pos0, jnp.int32(0),
         jnp.float32(0.0))
-
-    def _prims(jx, acc):
-        for eqn in jx.eqns:
-            acc.add(eqn.primitive.name)
-            for v in eqn.params.values():
-                if hasattr(v, "jaxpr"):                  # ClosedJaxpr
-                    _prims(v.jaxpr, acc)
-                elif hasattr(v, "eqns"):                 # raw Jaxpr
-                    _prims(v, acc)
-        return acc
-
-    prims = _prims(jaxpr.jaxpr, set())
-    assert "scan" in prims
-    assert not any("callback" in name for name in prims), prims
+    analysis.check_no_callbacks(summary, require_scan=True,
+                                subject="decode-scan").raise_if_failed()
 
 
 def test_scan_cache_donation_usable_and_warning_free():
