@@ -165,6 +165,37 @@ def run_encoded(configs=None, smoke: bool = False):
                 f"{tps_live:.1f} tok/s) — encode-once regression?")
     if smoke:
         print("# smoke OK: encoded-weights decode bit-identical & not slower")
+    rows += run_comms(smoke=smoke)
+    return rows
+
+
+def run_comms(ndev: int = 8, smoke: bool = False):
+    """Analytic bytes-on-wire per decode step for the sharded launch layouts.
+
+    The `launch.costs.comms_bytes_decode` column (DESIGN.md §17): per-device
+    ring-collective wire bytes of ONE sharded decode step over an
+    ``ndev``-way model axis, under each forced layout and the per-launch
+    "auto" choice.  Not a timing — the host-mesh parity platform has no real
+    interconnect — but the model the Engine's layout preference is chosen
+    by, pinned into the trajectory JSON so a regression in the cost model
+    (or a layout flip) is visible in review."""
+    from repro.launch.costs import comms_bytes_decode
+
+    rows = []
+    B = 2
+    for arch in ("rns-smollm-135m-fused", "rns-smollm-135m-resident"):
+        cfg = get_smoke_config(arch)
+        by = {lay: comms_bytes_decode(cfg, B, ndev=ndev, layout=lay)
+              for lay in ("channel", "column", "auto")}
+        tag = f"{arch}_B{B}_n{ndev}"
+        print(f"# {tag}: comms_bytes/step channel={by['channel']:.0f} "
+              f"column={by['column']:.0f} auto={by['auto']:.0f}")
+        rows.append((f"decode_comms_{tag}", by["auto"],
+                     f"channel={by['channel']:.0f},column={by['column']:.0f},"
+                     f"ndev={ndev}"))
+        if smoke:
+            assert by["auto"] <= min(by["channel"], by["column"]) + 1e-6, (
+                f"{tag}: auto layout costs more wire than a forced layout")
     return rows
 
 

@@ -22,7 +22,7 @@ Comparison rules:
     different jax backend or smoke mode — cross-device timings don't gate —
     or when no committed baseline exists yet.
 
-Usage: PYTHONPATH=src python -m benchmarks.gate [--fresh BENCH_7.json]
+Usage: PYTHONPATH=src python -m benchmarks.gate [--fresh BENCH_9.json]
 """
 from __future__ import annotations
 
@@ -80,8 +80,8 @@ def main(argv=None) -> int:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--fresh", default="BENCH_7.json",
-                    help="fresh benchmark json to gate (BENCH_7.json)")
+    ap.add_argument("--fresh", default="BENCH_9.json",
+                    help="fresh benchmark json to gate (BENCH_9.json)")
     args = ap.parse_args(argv)
 
     tol = float(os.environ.get(TOL_ENV, "3.0"))

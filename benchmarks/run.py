@@ -1,7 +1,7 @@
 """Benchmark driver: one section per paper table/figure.
 
 Prints a final `name,us_per_call,derived` CSV (harness contract) and writes
-the same rows as machine-readable **BENCH_7.json** — the perf-trajectory
+the same rows as machine-readable **BENCH_9.json** — the perf-trajectory
 artifact (commit hash + device + per-row values: the matmul
 forward/matmul/reverse conversion split, the fused-vs-staged megakernel row
 with its estimated-HBM-bytes columns, and decode tok/s), uploaded by CI so
@@ -20,7 +20,7 @@ import sys
 import time
 import traceback
 
-BENCH_JSON = "BENCH_7.json"
+BENCH_JSON = "BENCH_9.json"
 
 
 def _commit() -> str:
@@ -80,7 +80,7 @@ def main(argv=None) -> None:
     # machine-readable trajectory artifact — written even on section
     # failure so a partial run still leaves evidence.
     payload = {
-        "bench": 7,
+        "bench": 9,
         "commit": _commit(),
         "device": jax.default_backend(),
         "smoke": bool(args.smoke),

@@ -28,8 +28,9 @@ from .bounds import (PipelineSpec, check_channel_plan, check_pipeline,
 from .findings import AnalysisError, Finding, Report, merged
 from .intervals import TOP, Interval, dtype_range
 from .lint import check_config
-from .residency import (JaxprSummary, check_no_callbacks, check_pallas_count,
-                        check_resident, summarize, summarize_fn)
+from .residency import (COLLECTIVE_PRIMS, JaxprSummary, check_no_callbacks,
+                        check_pallas_count, check_reduced_wire, check_resident,
+                        summarize, summarize_fn)
 from .schema import (validate_bench, validate_bench_file, validate_tune_table,
                      validate_tune_table_file)
 
@@ -40,7 +41,8 @@ __all__ = [
     "pipeline_specs_for",
     "check_fn_bounds", "interpret",
     "JaxprSummary", "summarize", "summarize_fn", "check_resident",
-    "check_pallas_count", "check_no_callbacks",
+    "check_pallas_count", "check_no_callbacks", "check_reduced_wire",
+    "COLLECTIVE_PRIMS",
     "check_launch", "check_basis_tables", "check_tune_table",
     "check_config_launches",
     "validate_bench", "validate_bench_file", "validate_tune_table",

@@ -22,12 +22,19 @@ from .findings import Report
 __all__ = [
     "JaxprSummary", "summarize", "summarize_fn",
     "check_resident", "check_pallas_count", "check_no_callbacks",
-    "MODULAR_PRIMS",
+    "check_reduced_wire", "MODULAR_PRIMS", "COLLECTIVE_PRIMS",
 ]
 
 # Primitives that perform a modular reduction outside a kernel body — on a
 # resident path every one of these must live inside pallas_call.
 MODULAR_PRIMS = ("rem", "mod")
+
+# Cross-device collectives (repro.dist's sharded launches).  The walk
+# records each non-pallas site with its operand shapes/dtypes so the wire
+# checks and `dist.comms.collective_wire_bytes` can reason about WHAT
+# crosses the interconnect, not just that something does.
+COLLECTIVE_PRIMS = ("psum", "psum2", "all_gather", "all_to_all", "ppermute",
+                    "reduce_scatter", "pmax", "pmin")
 
 _CALLBACK_MARKERS = ("callback", "outside_call", "infeed", "outfeed")
 
@@ -39,6 +46,9 @@ class JaxprSummary:
     outside: Counter            # primitive name -> count outside pallas_call
     inside: Counter             # primitive name -> count inside kernel bodies
     pallas_calls: int           # number of pallas_call launch sites
+    # one entry per collective site outside kernel bodies:
+    # (primitive name, ((operand shape, operand dtype str), ...))
+    collectives: list = dataclasses.field(default_factory=list)
 
     @property
     def all_prims(self) -> Counter:
@@ -80,6 +90,13 @@ def summarize(closed_jaxpr) -> JaxprSummary:
             if nm == "pallas_call":
                 summary.pallas_calls += 1
             (summary.inside if inside_pallas else summary.outside)[nm] += 1
+            if not inside_pallas and nm in COLLECTIVE_PRIMS:
+                # shard_map's replication-rewrite renames psum → psum2;
+                # record the canonical name so checks match either spelling
+                canon = "psum" if nm == "psum2" else nm
+                summary.collectives.append((canon, tuple(
+                    (tuple(v.aval.shape), str(v.aval.dtype))
+                    for v in eqn.invars if hasattr(v.aval, "shape"))))
             inner = inside_pallas or nm == "pallas_call"
             for sub in _sub_jaxprs(eqn):
                 walk(sub, inner)
@@ -156,4 +173,36 @@ def check_no_callbacks(summary: JaxprSummary, *,
         rep.add("residency", "decode loop",
                 f"{summary.scans} lax.scan(s) in the jaxpr, expected at "
                 f"most {max_scans} — the decode loop was split")
+    return rep
+
+
+def check_reduced_wire(summary: JaxprSummary, channels: Iterable[int], *,
+                       nlimbs: Optional[Iterable[int]] = None,
+                       subject: str = "jaxpr") -> Report:
+    """Channel-sharded wire invariant: residues never cross the interconnect.
+
+    The C-sharded megakernel's contract (DESIGN.md §17) is that the ONLY
+    thing a launch communicates is its post-MRC reduced result — the narrow
+    (L1, M, N) int32 CRT-partial limb planes, or a plain float output.  A
+    collective whose operand is an integer (C, M, N) stack with C equal to a
+    launch basis' channel count means a residue slab is on the wire — the
+    partitioning leaked pre-reduction state.  ``channels`` names the channel
+    counts of the model's launch bases; ``nlimbs`` whitelists the limb-plane
+    leading dims (a basis whose L1 collides with another basis' C would
+    otherwise false-positive).
+    """
+    rep = Report(subject=f"residency:{subject}")
+    chans = set(int(c) for c in channels)
+    limbs = set(int(v) for v in (nlimbs or ()))
+    for name, operands in summary.collectives:
+        for shape, dtype in operands:
+            if (len(shape) >= 3 and shape[0] in chans
+                    and shape[0] not in limbs
+                    and "int" in dtype and "uint" not in dtype[:4]):
+                rep.add("residency", "reduced wire",
+                        f"collective '{name}' moves an integer {shape} "
+                        f"{dtype} stack whose leading dim matches a launch "
+                        f"basis' channel count — residues crossed the "
+                        f"interconnect instead of the post-MRC reduced "
+                        f"result")
     return rep

@@ -88,6 +88,12 @@ class ModelConfig:
     # MRC exit per chain.  Requires encode_weights=True (the MLP weights are
     # encoded in the chain basis at load time).
     linear_domain: str = "float"
+    # "none" | "auto" | "channel" | "column": multi-device layout preference
+    # for sharded serving (repro.dist, DESIGN.md §17).  Only consulted when an
+    # Engine is built with a mesh; "channel" splits the residue channel axis C
+    # over "model" (only post-MRC reduced limbs cross the interconnect),
+    # "column" splits output columns N, "auto" picks per launch by wire bytes.
+    dist_layout: str = "none"
     param_dtype: str = "bfloat16"
     remat: bool = True
     remat_policy: str = "full"   # full | save_ar (keep TP-AR outputs) | none
@@ -120,6 +126,8 @@ class ModelConfig:
             spec = _dc.replace(spec, encode_weights=True)
         if self.linear_domain != "float":
             spec = _dc.replace(spec, domain=self.linear_domain)
+        if self.dist_layout != "none":
+            spec = _dc.replace(spec, dist=self.dist_layout)
         return spec
 
     @property

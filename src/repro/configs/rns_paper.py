@@ -95,8 +95,56 @@ def smoke_resident() -> ModelConfig:
                                linear_domain="residue")
 
 
+def full_sharded() -> ModelConfig:
+    """The fused serving cell with a multi-device layout preference
+    (repro.dist, DESIGN.md §17): built with a mesh, the Engine shards the
+    residue CHANNEL axis of every launch over "model" — per-device fold
+    ladders produce partial CRT limbs and only the narrow post-MRC reduced
+    result crosses the interconnect (one psum of (L1, M, N) int32 limb
+    planes per launch; the (C, M, N) residues never leave their device).
+    Without a mesh the config serves identically to `-fused`."""
+    return dataclasses.replace(smollm_135m.full(),
+                               name="rns-smollm-135m-sharded",
+                               linear_backend="rns_int8:pallas_fused",
+                               encode_weights=True,
+                               dist_layout="channel")
+
+
+def smoke_sharded() -> ModelConfig:
+    return dataclasses.replace(smollm_135m.smoke(),
+                               name="rns-smollm-smoke-sharded",
+                               linear_backend="rns_int8:pallas_fused",
+                               encode_weights=True,
+                               dist_layout="channel")
+
+
+def full_resident_sharded() -> ModelConfig:
+    """Residue residency + channel sharding: the chained MLP hands residues
+    between launches AND each launch's channels are device-local.  The
+    emit="residues" chain interior replicates (zero comms — re-encode needs
+    every modulus); only each chain's float exit pays the one limb psum."""
+    return dataclasses.replace(smollm_135m.full(),
+                               name="rns-smollm-135m-resident-sharded",
+                               linear_backend="rns_int8:pallas_fused",
+                               encode_weights=True,
+                               linear_domain="residue",
+                               dist_layout="channel")
+
+
+def smoke_resident_sharded() -> ModelConfig:
+    return dataclasses.replace(smollm_135m.smoke(),
+                               name="rns-smollm-smoke-resident-sharded",
+                               linear_backend="rns_int8:pallas_fused",
+                               encode_weights=True,
+                               linear_domain="residue",
+                               dist_layout="channel")
+
+
 register("rns-smollm-135m", full, smoke)
 register("rns-smollm-135m-pallas", full_pallas, smoke_pallas)
 register("rns-smollm-135m-encoded", full_encoded, smoke_encoded)
 register("rns-smollm-135m-fused", full_fused, smoke_fused)
 register("rns-smollm-135m-resident", full_resident, smoke_resident)
+register("rns-smollm-135m-sharded", full_sharded, smoke_sharded)
+register("rns-smollm-135m-resident-sharded", full_resident_sharded,
+         smoke_resident_sharded)

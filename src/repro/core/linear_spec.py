@@ -27,6 +27,15 @@ independent choices (DESIGN.md §12):
                           activation forward conversion and one MRC exit per
                           chain).  Residue residency requires the rns mode
                           with pre-encoded weights.
+  * ``dist``            — multi-device layout preference for sharded serving
+                          (DESIGN.md §17): "none" (single-device), "auto"
+                          (per-launch cost model in `repro.dist.comms`),
+                          "channel" (split the residue channel axis C over
+                          "model"; only post-MRC reduced limbs cross the
+                          interconnect) or "column" (split output columns N,
+                          all-gather at exit).  Non-"none" requires the rns
+                          mode — distributing a bf16 dot is plain GSPMD, not
+                          this subsystem's job.
 
 Specs are frozen dataclasses: hashable (they ride through ``jax.jit`` static
 arguments), comparable, and resolved once per distinct config string via the
@@ -55,6 +64,7 @@ class LinearSpec:
     broadcast: bool = True         # broadcast-operand vs per-channel datapath
     encode_weights: bool = False   # weights pre-encoded to residues at load
     domain: str = "float"          # float | residue (chained activations)
+    dist: str = "none"             # none | auto | channel | column (§17)
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -72,6 +82,14 @@ class LinearSpec:
                 "domain='residue' needs mode='rns_int8' with "
                 "encode_weights=True: residue-resident chains consume "
                 "pre-encoded weights in the chain basis (DESIGN.md §14)")
+        if self.dist not in ("none", "auto", "channel", "column"):
+            raise ValueError(f"dist must be 'none', 'auto', 'channel' or "
+                             f"'column', got {self.dist!r}")
+        if self.dist != "none" and not self.is_rns:
+            raise ValueError(
+                "dist layouts shard the RNS launches; a bf16 linear "
+                "distributes through plain GSPMD — use mode='rns_int8' "
+                "or dist='none'")
 
     # ------------------------------------------------------------ builders --
     @classmethod
@@ -101,6 +119,8 @@ class LinearSpec:
                 flags.append("encoded")
             if self.domain != "float":
                 flags.append(f"domain={self.domain}")
+            if self.dist != "none":
+                flags.append(f"dist={self.dist}")
         inner = (":" + ",".join(flags)) if flags else ""
         return f"LinearSpec({self.mode}{inner})"
 

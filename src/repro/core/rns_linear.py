@@ -65,6 +65,23 @@ __all__ = ["rns_dense", "rns_chain_linear", "rns_int_matmul",
 _basis_for_k = basis_for_int8_matmul
 
 
+def _dist_ctx():
+    """The active multi-device serving context, or None (DESIGN.md §17).
+
+    Every fused-megakernel branch below consults this: under an active
+    `repro.dist` context the launch routes through
+    `dist.rns_shard.sharded_fused_matmul` (same arguments, bit-identical
+    outputs), otherwise nothing changes — the lookup is one module attribute
+    read, and the import is lazy so `repro.core` never depends on
+    `repro.dist` at import time.
+    """
+    try:
+        from repro.dist import context as _dc
+    except ImportError:      # pragma: no cover - dist package always present
+        return None
+    return _dc.current()
+
+
 def reconstruct_mrc(residues, basis: RNSBasis, *, backend: str = "auto",
                     interpret: bool | None = None, scale=None):
     """(C, ...) int32 canonical residues → signed value as float32.
@@ -133,6 +150,12 @@ def rns_int_matmul(xq, wq, basis: RNSBasis | None = None,
         # on the staged kernels (resolve_backend degrades pallas_fused).
         from repro.kernels.rns_fused import rns_fused_matmul
 
+        ctx = _dist_ctx()
+        if ctx is not None:
+            from repro.dist.rns_shard import sharded_fused_matmul
+
+            return sharded_fused_matmul(xq, wq, basis, ctx=ctx, scale=scale,
+                                        interpret=interpret)
         return rns_fused_matmul(xq, wq, basis, scale=scale,
                                 interpret=interpret)
     if broadcast:
@@ -218,6 +241,13 @@ def rns_chain_linear(x, w, *, gate=None, gate_scale=None, scale_row=None,
     if cp.resolve_pipeline_backend(backend) == "pallas_fused":
         from repro.kernels.rns_fused import rns_fused_matmul
 
+        ctx = _dist_ctx()
+        if ctx is not None:
+            from repro.dist.rns_shard import sharded_fused_matmul
+
+            return sharded_fused_matmul(x, wt, ctx=ctx, gate=gate, emit=emit,
+                                        scale_row=srow, scale_col=wt.scale,
+                                        interpret=interpret)
         return rns_fused_matmul(x, wt, gate=gate, emit=emit, scale_row=srow,
                                 scale_col=wt.scale, interpret=interpret)
 
@@ -262,6 +292,15 @@ def _rns_dense_fwd_impl(x, w, backend, broadcast):
         sx = quant_scale(x, axis=-1)          # per-row; round/clip in-kernel
         from repro.kernels.rns_fused import rns_fused_matmul
 
+        ctx = _dist_ctx()
+        if ctx is not None:
+            from repro.dist.rns_shard import sharded_fused_matmul
+
+            y = sharded_fused_matmul(x, wq,
+                                     basis_for_int8_matmul(x.shape[-1]),
+                                     ctx=ctx, quantize=True, scale_row=sx,
+                                     scale_col=sw)
+            return y.astype(x.dtype)
         y = rns_fused_matmul(x, wq, basis_for_int8_matmul(x.shape[-1]),
                              quantize=True, scale_row=sx, scale_col=sw)
         return y.astype(x.dtype)
@@ -309,6 +348,13 @@ def _rns_dense_enc_impl(x, w_res, w_scale, wt_meta, backend, broadcast):
         sx = quant_scale(x, axis=-1)
         from repro.kernels.rns_fused import rns_fused_matmul
 
+        ctx = _dist_ctx()
+        if ctx is not None:
+            from repro.dist.rns_shard import sharded_fused_matmul
+
+            y = sharded_fused_matmul(x, wt, ctx=ctx, quantize=True,
+                                     scale_row=sx, scale_col=w_scale)
+            return y.astype(x.dtype)
         y = rns_fused_matmul(x, wt, quantize=True, scale_row=sx,
                              scale_col=w_scale)
         return y.astype(x.dtype)

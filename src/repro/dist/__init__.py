@@ -1,0 +1,24 @@
+"""repro.dist — multi-device sharded serving for the RNS datapath.
+
+The residue channel axis C is embarrassingly parallel (the paper's whole
+point: independent narrow modulo channels), so the fused megakernel shards
+two ways over the mesh's "model" axis (DESIGN.md §17):
+
+  channel — split C; each device runs its own fold ladder and a CRT-partial
+            epilogue, ONE psum of narrow post-MRC limb planes combines them.
+            Residues never cross the interconnect.
+  column  — split N; full basis per device, all-gather at the exit.
+
+`context` carries the trace-time mesh/layout switch the core linear hooks
+consult; `comms` is the bytes-on-wire cost model that picks a layout per
+launch; `rns_shard` holds the shard_map wrappers (bit-identical to
+single-device by contract); `engine` threads a mesh through
+`serve.Engine` (one-time sharded weight encode + sharded decode).
+
+This package is import-light on purpose: the core hooks do a lazy
+``from repro.dist import context`` on every fused launch, so nothing heavier
+than the stdlib may load here.
+"""
+from .context import DistContext, current, use
+
+__all__ = ["DistContext", "current", "use"]

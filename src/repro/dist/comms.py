@@ -1,0 +1,98 @@
+"""Bytes-on-wire cost model for the two megakernel partitionings (§17).
+
+Per launch over an ``n``-way "model" axis (ring-collective formulas, the
+same 2(n−1)/n / (n−1)/n factors `launch.costs` uses):
+
+  channel (split C)  — ONE psum of the (L1, M, N) int32 CRT-partial limb
+                       planes: 2(n−1)/n · L1·M·N·4 bytes.  ``emit=
+                       "residues"`` launches REPLICATE under this layout
+                       (re-encoding needs every device's moduli): 0 bytes.
+  column  (split N)  — all-gather of the float (M, N) output,
+                       (n−1)/n · M·N·4 bytes, or of the (C, M, N) residue
+                       slab for ``emit="residues"``: (n−1)/n · C·M·N·item.
+
+The asymmetry is the tentpole's thesis: C-sharding moves the narrow
+post-MRC reduced result once, N-sharding's emit-res exits move the C×
+residue slab — so "auto" picks channels for in-domain chains whenever C
+divides the axis.  Costs are bytes only; the replicated-compute price of a
+channel-layout emit-res launch is deliberately out of scope (wire bytes are
+what the decode roofline is short on, not redundant FLOPs at decode M).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["channel_bytes", "column_bytes", "choose_layout",
+           "collective_wire_bytes"]
+
+_F32 = 4
+_INT32 = 4
+
+
+def _ar(nbytes: float, n: int) -> float:
+    """Ring all-reduce wire bytes per device for an nbytes buffer."""
+    return 2.0 * (n - 1) / n * nbytes if n > 1 else 0.0
+
+
+def _ag(nbytes: float, n: int) -> float:
+    """Ring all-gather wire bytes per device (nbytes = the GATHERED size)."""
+    return (n - 1) / n * nbytes if n > 1 else 0.0
+
+
+def channel_bytes(M: int, N: int, nlimbs: int, ndev: int, *,
+                  emit: str = "float") -> float:
+    """Wire bytes of ONE channel-sharded launch (psum of limb planes)."""
+    if emit == "residues":
+        return 0.0       # replicated launch: residues never cross
+    return _ar(float(nlimbs) * M * N * _INT32, ndev)
+
+
+def column_bytes(C: int, M: int, N: int, ndev: int, *, emit: str = "float",
+                 itemsize: int = 4) -> float:
+    """Wire bytes of ONE column-sharded launch (all-gather at the exit)."""
+    if emit == "residues":
+        return _ag(float(C) * M * N * itemsize, ndev)
+    return _ag(float(M) * N * _F32, ndev)
+
+
+def choose_layout(*, C: int, M: int, N: int, nlimbs: int, ndev: int,
+                  emit: str = "float", itemsize: int = 4) -> str:
+    """Feasible-minimum layout for one launch.
+
+    Divisibility gates feasibility (C % n for channels, N % n for columns);
+    among the feasible layouts the smaller wire cost wins, channel breaking
+    ties (it also shards the weight residues' HBM footprint C-ways).
+    Neither feasible → "replicate" (the plain single-program launch).
+    """
+    cand = []
+    if C % ndev == 0:
+        cand.append((channel_bytes(M, N, nlimbs, ndev, emit=emit), 0,
+                     "channel"))
+    if N % ndev == 0:
+        cand.append((column_bytes(C, M, N, ndev, emit=emit,
+                                  itemsize=itemsize), 1, "column"))
+    if not cand:
+        return "replicate"
+    return min(cand)[2]
+
+
+def collective_wire_bytes(summary, ndev: int) -> float:
+    """Ring-model wire bytes of every collective a traced program performs.
+
+    ``summary`` is an `analysis.residency.JaxprSummary` (its ``collectives``
+    census records each site's operand shapes/dtypes).  psum operands are
+    full-shaped per device → all-reduce cost; gather-family operands are the
+    LOCAL shard → the gathered buffer is ndev× the operand.  This is the
+    "measured" side of `benchmarks.decode_bench`'s comms column: derived
+    from the program jax actually traced, against the analytic per-launch
+    model above.
+    """
+    total = 0.0
+    for name, operands in summary.collectives:
+        nbytes = sum(float(np.prod(shape, dtype=np.float64))
+                     * np.dtype(dtype).itemsize for shape, dtype in operands)
+        if name == "psum":
+            total += _ar(nbytes, ndev)
+        else:
+            total += _ag(nbytes * ndev, ndev)
+    return total

@@ -1,0 +1,65 @@
+"""Trace-time distribution context (DESIGN.md §17).
+
+`serve.Engine` (and tests) activate a :class:`DistContext` around the jit
+invocation sites of prefill / decode; the fused branches of
+`core.rns_linear` consult :func:`current` at TRACE time and route their
+launches through `repro.dist.rns_shard` when one is active.  A context, not
+a config thread-through, because the same model code must trace sharded and
+unsharded without signature changes — exactly how `jax.default_matmul_
+precision` scopes behave.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Iterator, Optional
+
+__all__ = ["DistContext", "current", "use"]
+
+LAYOUTS = ("auto", "channel", "column")
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    """The mesh + partitioning preference active for fused RNS launches.
+
+    ``layout="auto"`` lets the `comms` cost model choose per launch;
+    "channel"/"column" force one partitioning (raising when the launch's
+    C resp. N is not divisible by the mesh's ``axis`` size).
+    """
+
+    mesh: Any
+    layout: str = "auto"
+    axis: str = "model"
+
+    def __post_init__(self):
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"layout must be one of {LAYOUTS}, "
+                             f"got {self.layout!r}")
+        if self.axis not in tuple(self.mesh.axis_names):
+            raise ValueError(f"mesh has axes {tuple(self.mesh.axis_names)}, "
+                             f"no {self.axis!r}")
+
+    @property
+    def nshards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+
+_CURRENT: Optional[DistContext] = None
+
+
+def current() -> Optional[DistContext]:
+    """The active context, or None (the single-device fast path)."""
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def use(ctx: Optional[DistContext]) -> Iterator[Optional[DistContext]]:
+    """Activate ``ctx`` for the duration of a trace (re-entrant)."""
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = ctx
+    try:
+        yield ctx
+    finally:
+        _CURRENT = prev

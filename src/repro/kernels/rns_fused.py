@@ -66,13 +66,13 @@ from repro.core.quant import QMAX
 from repro.core.rns import basis_for_int8_matmul
 from repro.core.rns_tensor import RNSTensor
 
-__all__ = ["rns_fused_matmul"]
+__all__ = ["rns_fused_matmul", "rns_fused_crt_partial"]
 
 
 def _kernel(sched_ref, mods_ref, inv_ref, *refs, plan: ChannelPlan,
             conv: ConversionPlan, nk: int, quantize: bool, residue_in: bool,
             has_gate: bool, emit: bool, has_srow: bool, has_scol: bool,
-            has_scale: bool, encoded: bool):
+            has_scale: bool, encoded: bool, crt: bool, nlimbs_out: int):
     rest = list(refs)
     x_ref = rest.pop(0)
     srow_ref = rest.pop(0) if has_srow else None
@@ -81,6 +81,8 @@ def _kernel(sched_ref, mods_ref, inv_ref, *refs, plan: ChannelPlan,
     scol_ref = rest.pop(0) if has_scol else None
     scale_ref = rest.pop(0) if has_scale else None
     creq_ref = rest.pop(0) if emit else None
+    crt_v_ref = rest.pop(0) if crt else None
+    crt_mc_ref = rest.pop(0) if crt else None
     o_ref, acc_ref = rest
     C = plan.k
     k_step = pl.program_id(2)
@@ -134,6 +136,35 @@ def _kernel(sched_ref, mods_ref, inv_ref, *refs, plan: ChannelPlan,
 
     @pl.when(k_step == nk - 1)
     def _epilogue():
+        if crt:
+            # CRT-partial epilogue for channel-sharded launches (repro.dist,
+            # DESIGN.md §17): this launch holds only a SLICE of the basis, so
+            # the MRC digit schedule (which couples all channels) cannot run.
+            # Instead emit the CRT partial sum Σ_j |r_j·v_j|_{m_j}·(M/m_j)
+            # over the LOCAL channels as 15-bit limb planes: the psum of
+            # these planes over shards equals the full CRT sum, < C·M, which
+            # the (replicated) finish reduces mod M to the SAME canonical
+            # value the single-device MRC epilogue recombines.  Int32 safety:
+            # r, v_j < 2^15 so r·v_j < 2^30; α_j < 2^15, each mc limb < 2^15
+            # so α_j·mc < 2^30; running limb + carry keep v < 2^31 with the
+            # carry propagated after EVERY channel add.
+            limbs = [jnp.zeros(acc_ref.shape[1:], jnp.int32)
+                     for _ in range(nlimbs_out)]
+            for j in range(C):
+                r = plan.fold(acc_ref[j, :, :], sched=sched_ref[j, :, :],
+                              m=mods_ref[j])
+                alpha = jnp.mod(r * crt_v_ref[j], mods_ref[j])
+                carry = jnp.zeros(acc_ref.shape[1:], jnp.int32)
+                nxt = []
+                for l in range(nlimbs_out):
+                    v = limbs[l] + crt_mc_ref[j, l] * alpha + carry
+                    nxt.append(jnp.bitwise_and(v, LIMB_MASK))
+                    carry = jnp.right_shift(v, LIMB_BITS)
+                limbs = nxt
+            for l in range(nlimbs_out):
+                o_ref[l, :, :] = limbs[l]
+            return
+
         # Stage ④: the shared fold ladder per channel, on schedule rows
         # streamed exactly as kernels/rns_matmul.py streams them; signed
         # (broadcast-operand) plans fold |acc| with the sign fix-up.  The
@@ -209,12 +240,14 @@ def _kernel(sched_ref, mods_ref, inv_ref, *refs, plan: ChannelPlan,
     jax.jit, static_argnames=("plan", "conv", "quantize", "residue_in",
                               "has_gate", "emit", "has_srow", "has_scol",
                               "has_scale", "encoded", "bm", "bn", "bk",
-                              "interpret"))
+                              "interpret", "crt", "nlimbs_out"))
 def _fused_call(x, srow, gate, w, scol, scale, creq, *, plan: ChannelPlan,
                 conv: ConversionPlan, quantize: bool, residue_in: bool,
                 has_gate: bool, emit: bool, has_srow: bool,
                 has_scol: bool, has_scale: bool, encoded: bool, bm: int,
-                bn: int, bk: int, interpret: bool):
+                bn: int, bk: int, interpret: bool,
+                sched_tab=None, mods_tab=None, crt_v=None, crt_mc=None,
+                crt: bool = False, nlimbs_out: int = 0):
     C = plan.k
     M, K = x.shape[-2], x.shape[-1]
     N = w.shape[-1]
@@ -245,7 +278,12 @@ def _fused_call(x, srow, gate, w, scol, scale, creq, *, plan: ChannelPlan,
         pl.BlockSpec((C, C), lambda i, j, k: (0, 0),
                      memory_space=pltpu.SMEM),
     ]
-    args = [jnp.asarray(plan.sched), jnp.asarray(plan.mods),
+    # sched/mods default to the STATIC plan tables; a channel-sharded launch
+    # (repro.dist) overrides them with TRACED shard_map operands — the local
+    # plan is SPMD-uniform (shapes only), the actual per-device moduli and
+    # fold rungs arrive sliced over the mesh.
+    args = [jnp.asarray(plan.sched) if sched_tab is None else sched_tab,
+            jnp.asarray(plan.mods) if mods_tab is None else mods_tab,
             jnp.asarray(conv.inv)]
     if residue_in:
         in_specs.append(pl.BlockSpec((C, bm, bk), lambda i, j, k: (0, i, k)))
@@ -273,10 +311,22 @@ def _fused_call(x, srow, gate, w, scol, scale, creq, *, plan: ChannelPlan,
         in_specs.append(pl.BlockSpec((1,), lambda i, j, k: (0,),
                                      memory_space=pltpu.SMEM))
         args.append(creq)
+    if crt:
+        in_specs.append(pl.BlockSpec((C,), lambda i, j, k: (0,),
+                                     memory_space=pltpu.SMEM))
+        args.append(crt_v)
+        in_specs.append(pl.BlockSpec((C, nlimbs_out),
+                                     lambda i, j, k: (0, 0),
+                                     memory_space=pltpu.SMEM))
+        args.append(crt_mc)
 
     if emit:
         out_spec = pl.BlockSpec((C, bm, bn), lambda i, j, k: (0, i, j))
         out_shape = jax.ShapeDtypeStruct((C, Mp, Np), plan.residue_dtype)
+    elif crt:
+        out_spec = pl.BlockSpec((nlimbs_out, bm, bn),
+                                lambda i, j, k: (0, i, j))
+        out_shape = jax.ShapeDtypeStruct((nlimbs_out, Mp, Np), jnp.int32)
     else:
         out_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
         out_shape = jax.ShapeDtypeStruct((Mp, Np), jnp.float32)
@@ -285,7 +335,7 @@ def _fused_call(x, srow, gate, w, scol, scale, creq, *, plan: ChannelPlan,
                           quantize=quantize, residue_in=residue_in,
                           has_gate=has_gate, emit=emit, has_srow=has_srow,
                           has_scol=has_scol, has_scale=has_scale,
-                          encoded=encoded),
+                          encoded=encoded, crt=crt, nlimbs_out=nlimbs_out),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
@@ -296,12 +346,13 @@ def _fused_call(x, srow, gate, w, scol, scale, creq, *, plan: ChannelPlan,
                                  "arbitrary")) if not interpret else None,
         interpret=interpret,
     )(*args)
-    return out[:, :M, :N] if emit else out[:M, :N]
+    return out[:, :M, :N] if (emit or crt) else out[:M, :N]
 
 
 def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
                      gate=None, emit: str = "float",
                      scale_row=None, scale_col=None, scale=None,
+                     requant_creq=None,
                      block_m: int | None = None, block_n: int | None = None,
                      block_k: int | None = None,
                      interpret: bool | None = None):
@@ -437,6 +488,10 @@ def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
         if scale is not None:
             raise ValueError("emit='residues' uses scale_row/scale_col; "
                              "generic scale= has no in-domain meaning")
+    if requant_creq is not None and not emit_res:
+        raise ValueError("requant_creq= overrides the in-domain requantize "
+                         "constant and only means something with "
+                         "emit='residues'")
     N = w_arr.shape[-1]
 
     interpret = resolve_interpret(interpret)
@@ -478,7 +533,12 @@ def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
 
     creq = out_scale = None
     if emit_res:
-        creq = requant_const(scale_col, K)
+        # A column-sharded launch (repro.dist) sees only an N/n column slice
+        # of scale_col, but the requantize constant is max over the FULL
+        # column scale — the wrapper computes it once outside the shard_map
+        # region and overrides it here so every shard divides by the same c.
+        creq = (requant_const(scale_col, K) if requant_creq is None
+                else jnp.asarray(requant_creq, jnp.float32).reshape(()))
         # The output scale is formed OUTSIDE the kernel from the same values
         # the epilogue divides by — `quant.requant_scale(srow, scol, K)`
         # spelled on the already-reshaped operands (same float ops, one rule).
@@ -492,7 +552,101 @@ def rns_fused_matmul(x, w, basis=None, *, quantize: bool = False,
                       has_scol=scol is not None, has_scale=sc is not None,
                       encoded=encoded, bm=bm, bn=bn, bk=bk,
                       interpret=interpret)
+    # The launch boundary is a bit-exactness contract (batch invariance,
+    # sharded == single-device parity), so it must be opaque to consumer
+    # fusion: off-TPU the interpreted kernel inlines into the surrounding
+    # HLO, where XLA duplicates the dequant epilogue per consumer and
+    # FMA-contracts the copies differently — the same launch then yields
+    # different bits depending on what reads it.  The barrier pins ONE
+    # materialization of the declared output (an identity on its value).
+    out = jax.lax.optimization_barrier(out)
     if emit_res:
         return RNSTensor(residues=out, scale=out_scale, basis=basis,
                          bound=127, signed=True)
     return out
+
+
+def rns_fused_crt_partial(x, w, *, plan: ChannelPlan, conv: ConversionPlan,
+                          mods, sched, crt_v, crt_mc,
+                          quantize: bool = False, scale_row=None, gate=None,
+                          block_m: int | None = None,
+                          block_n: int | None = None,
+                          block_k: int | None = None,
+                          interpret: bool | None = None):
+    """Channel-slice megakernel launch: Stage ②–④ + a CRT-partial epilogue.
+
+    The channel-sharded distributed layout (`repro.dist.rns_shard`,
+    DESIGN.md §17) gives every device a C/n slice of the residue stacks.
+    MRC cannot run on a slice (its digit schedule couples all channels), so
+    this entry replaces Stage ⑤ with the CRT partial sum over the LOCAL
+    channels, Σ_j |r_j·v_j|_{m_j}·(M/m_j), returned as ``(L1, M, N)`` int32
+    15-bit limb planes (``L1 = crt_mc.shape[-1]``).  One ``psum`` of the
+    planes and a replicated mod-M finish recover the exact canonical value —
+    the caller owns both; residues never leave the kernel.
+
+    shard_map runs ONE program on every shard, so ``plan``/``conv`` are the
+    SPMD-uniform *local-shaped* plan (device 0's slice with global bound and
+    rung count — `repro.dist.rns_shard.local_plan`) while the actual
+    per-device tables ride in as traced operands: ``mods`` (C,), ``sched``
+    (C, R, 2), ``crt_v`` (C,) the CRT reconstruction inverses, ``crt_mc``
+    (C, L1) the limb decompositions of M/m_j.
+
+    ``x`` is a raw float (M, K) block with ``quantize=True``/``scale_row``
+    (the dense prologue), a raw (C, M, K) canonical residue slice (the
+    chained datapath — arrays, not RNSTensors: shard_map bodies hand slices
+    around raw), or raw signed int8.  ``w`` is the (C, K, N) residue slice
+    or a raw (K, N) int8 block (forward-converted against the sliced
+    ``mods`` in-kernel).  ``gate`` fuses the residue-in modular gate.
+    """
+    from . import tune
+
+    x = jnp.asarray(x)
+    w = jnp.asarray(w)
+    residue_in = x.ndim == 3
+    encoded = w.ndim == 3
+    if residue_in:
+        x = x.astype(plan.residue_dtype)
+        if x.shape[0] != plan.k:
+            raise ValueError(f"residue slice has {x.shape[0]} channels, "
+                             f"local plan has {plan.k}")
+        if quantize:
+            raise ValueError("quantize=True is the float prologue; residue "
+                             "slices are already quantized")
+    if encoded and w.shape[0] != plan.k:
+        raise ValueError(f"weight slice has {w.shape[0]} channels, "
+                         f"local plan has {plan.k}")
+    if quantize and scale_row is None:
+        raise ValueError("quantize=True needs the per-row quant scale_row")
+    M, K = x.shape[-2], x.shape[-1]
+    N = w.shape[-1]
+    nlimbs_out = int(crt_mc.shape[-1])
+
+    interpret = resolve_interpret(interpret)
+    variant = "pallas_fused" + ("_res" if residue_in else "") + "_crt"
+    if block_m is None or block_n is None or block_k is None:
+        tbm, tbn, tbk = tune.blocks_for(M, K, N, plan.k, dtype=str(w.dtype),
+                                        backend=variant,
+                                        x_channels=residue_in,
+                                        interpret=interpret)
+        block_m, block_n, block_k = (block_m or tbm, block_n or tbn,
+                                     block_k or tbk)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+
+    srow = (jnp.asarray(scale_row, jnp.float32).reshape(M, 1)
+            if quantize else None)
+    if gate is not None:
+        gate = jnp.asarray(gate)
+        if gate.shape != x.shape[-2:]:
+            raise ValueError(f"gate {gate.shape} must match the (M, K) "
+                             f"activation block {x.shape[-2:]}")
+    return _fused_call(x, srow, gate, w, None, None, None,
+                       plan=plan, conv=conv, quantize=quantize,
+                       residue_in=residue_in, has_gate=gate is not None,
+                       emit=False, has_srow=srow is not None,
+                       has_scol=False, has_scale=False, encoded=encoded,
+                       bm=bm, bn=bn, bk=bk, interpret=interpret,
+                       sched_tab=jnp.asarray(sched, jnp.int32),
+                       mods_tab=jnp.asarray(mods, jnp.int32),
+                       crt_v=jnp.asarray(crt_v, jnp.int32),
+                       crt_mc=jnp.asarray(crt_mc, jnp.int32),
+                       crt=True, nlimbs_out=nlimbs_out)

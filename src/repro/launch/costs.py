@@ -23,7 +23,7 @@ from typing import Dict
 from repro.configs.base import ModelConfig, ShapeConfig
 
 __all__ = ["analytic_cost", "CostReport", "decode_cache_bytes",
-           "paged_cache_bytes"]
+           "paged_cache_bytes", "comms_bytes_decode", "comms_bytes_prefill"]
 
 BF16 = 2
 F32 = 4
@@ -313,6 +313,109 @@ def analytic_cost(cfg: ModelConfig, shape: ShapeConfig, *,
 
     return CostReport(flops=flops_dev, flops_int8=flops_int8,
                       hbm_bytes=hbm, ici_bytes=ici, breakdown=bk)
+
+
+# ------------------------------------------- sharded-launch wire bytes ----
+def _fused_launch_mult(cfg: ModelConfig, s: dict) -> int:
+    """How many times ONE decode step runs a deduped fused-launch shape.
+
+    `kernels.tune.decode_shapes_for` dedupes across layers; the wire bill
+    needs the per-step multiplicity back.  Matching is by (K, N, emit)
+    against the dispatch in models/{transformer,layers}.py — every attention
+    layer runs the QKV (+wo) launches, every GLU MLP layer the
+    gate/up/down chain."""
+    d, F = cfg.d_model, cfg.d_ff
+    H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    has_attn = cfg.attention != "none" or cfg.hybrid
+    n_attn = cfg.num_layers if has_attn else 0
+    n_mlp = sum(1 for l in range(cfg.num_layers)
+                if cfg.mlp_kind(l) == "mlp" and F > 0)
+    K, N = s["K"], s["N"]
+    if cfg.linear_spec.domain == "residue":
+        if (K, N) == (d, (H + 2 * Hk) * dh):
+            return n_attn                         # stacked QKV chain
+        if (K, N) == (H * dh, d):
+            return n_attn                         # wo exit launch
+        if (K, N) == (d, F):
+            return n_mlp                          # gate OR up (emit splits)
+        if (K, N) == (F, d):
+            return n_mlp                          # gated down
+        return 0
+    mult = 0
+    if (K, N) == (d, H * dh):
+        mult += n_attn                            # q
+    if (K, N) == (d, Hk * dh):
+        mult += 2 * n_attn                        # k, v
+    if (K, N) == (H * dh, d):
+        mult += n_attn                            # wo
+    if (K, N) == (d, F):
+        mult += 2 * n_mlp if cfg.glu else n_mlp   # gate (+up)
+    if (K, N) == (F, d):
+        mult += n_mlp                             # down
+    return mult
+
+
+def _fused_wire_bytes(cfg: ModelConfig, M: int, *, ndev: int,
+                      layout: str) -> float:
+    import numpy as np
+
+    from repro.dist import comms
+    from repro.dist.engine import launch_bases
+    from repro.dist.rns_shard import crt_tables
+    from repro.kernels.tune import decode_shapes_for
+
+    if ndev <= 1:
+        return 0.0
+    shapes = decode_shapes_for(cfg, batch_sizes=(M,))
+    bases = {len(b.moduli): b for b in launch_bases(cfg)}
+    total = 0.0
+    for s in shapes:
+        basis = bases.get(s["C"])
+        mult = _fused_launch_mult(cfg, s)
+        if basis is None or mult == 0:
+            continue
+        emit = "residues" if s["emit"] else "float"
+        _, _, nlimbs = crt_tables(basis)
+        item = np.dtype(s["dtype"]).itemsize
+        lay = layout
+        if lay == "auto":
+            lay = comms.choose_layout(C=s["C"], M=s["M"], N=s["N"],
+                                      nlimbs=nlimbs, ndev=ndev, emit=emit,
+                                      itemsize=item)
+        # per-launch divisibility fallback, mirroring sharded_fused_matmul
+        if lay == "channel" and s["C"] % ndev:
+            lay = "column" if s["N"] % ndev == 0 else "replicate"
+        elif lay == "column" and s["N"] % ndev:
+            lay = "channel" if s["C"] % ndev == 0 else "replicate"
+        if lay == "channel":
+            b = comms.channel_bytes(s["M"], s["N"], nlimbs, ndev, emit=emit)
+        elif lay == "column":
+            b = comms.column_bytes(s["C"], s["M"], s["N"], ndev, emit=emit,
+                                   itemsize=item)
+        else:
+            b = 0.0
+        total += mult * b
+    return total
+
+
+def comms_bytes_decode(cfg: ModelConfig, batch: int, *, ndev: int,
+                       layout: str = "auto") -> float:
+    """Per-device wire bytes of ONE sharded decode step (DESIGN.md §17).
+
+    Sums `dist.comms`'s per-launch ring costs over every fused launch the
+    step runs (`kernels.tune.decode_shapes_for` shapes × per-layer
+    multiplicity) under ``layout`` ("channel" / "column" / "auto" — the same
+    per-launch preference-with-fallback rule `dist.rns_shard` resolves at
+    trace time).  Zero for non-fused configs and 1-device meshes."""
+    return _fused_wire_bytes(cfg, batch, ndev=ndev, layout=layout)
+
+
+def comms_bytes_prefill(cfg: ModelConfig, batch: int, seq: int, *,
+                        ndev: int, layout: str = "auto") -> float:
+    """Per-device wire bytes of a sharded prefill over ``batch×seq`` tokens
+    — the decode model at launch rows M = batch·seq (prefill runs the same
+    launches, just taller)."""
+    return _fused_wire_bytes(cfg, batch * seq, ndev=ndev, layout=layout)
 
 
 # --------------------------------------------------- serving cache sizing --

@@ -26,10 +26,19 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Degenerate mesh over whatever devices exist (tests / CPU examples)."""
+def make_host_mesh(model: int = 1):
+    """Mesh over whatever devices exist (tests / CPU examples).
+
+    ``model`` carves a model-parallel axis out of the host devices (the
+    sharded-serving parity tests run an 8-device host mesh as (4, 2) —
+    `XLA_FLAGS=--xla_force_host_platform_device_count=8`); the default is
+    the degenerate all-data mesh.
+    """
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    if n % model:
+        raise ValueError(f"model={model} does not divide the "
+                         f"{n} available devices")
+    return jax.make_mesh((n // model, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

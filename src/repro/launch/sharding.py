@@ -120,11 +120,85 @@ def _param_rule(mesh, mode: str, path: str, shape: Tuple[int, ...]):
     return P(*out)
 
 
+def _rns_param_specs(mesh, tree, mode: str):
+    """Distributed-serving placement for encoded pytrees (repro.dist, §17).
+
+    :class:`~repro.core.rns_tensor.RNSTensor` leaves shard over "model" —
+    the residue channel axis at −3 for ``"rns_tp"`` (strict: raises when the
+    axis size does not divide C, because a channel-sharded launch cannot
+    split a modulus) or the output-column axis at −1 for ``"rns_tp_col"``
+    (whose per-column scale shards along) — and EVERY other leaf replicates:
+    the bit-identity contract keeps the float einsums (embed, lm_head,
+    norms) whole, so GSPMD never re-associates a float reduction.
+    ``"rns_tp_auto"`` prefers channels per leaf and falls back to columns,
+    then replication.
+    """
+    from repro.core.rns_tensor import RNSTensor
+
+    mdl = MODEL_AXIS
+    n = _axis_size(mesh, mdl)
+
+    def is_rns(x):
+        return isinstance(x, RNSTensor)
+
+    def rep(x):
+        return P(*([None] * len(x.shape)))
+
+    def rule(leaf):
+        if not is_rns(leaf):
+            return rep(leaf)
+        res, scale = leaf.residues, leaf.scale
+        nd = len(res.shape)
+        C, N = res.shape[-3], res.shape[-1]
+
+        def at(pos):                      # position counted from the end
+            out = [None] * nd
+            out[nd + pos] = mdl
+            return P(*out)
+
+        r_spec, s_spec = rep(res), (None if scale is None else rep(scale))
+        if mode == "rns_tp":
+            if C % n:
+                raise ValueError(
+                    f"mesh '{mdl}' size {n} does not divide the residue "
+                    f"channel count C={C}; channel sharding (rns_tp) needs "
+                    "C % model == 0")
+            r_spec = at(-3)
+        elif mode == "rns_tp_col" and N % n == 0:
+            r_spec = at(-1)
+            if scale is not None:         # (…, 1, N) per-column scale
+                s = [None] * len(scale.shape)
+                s[-1] = mdl
+                s_spec = P(*s)
+        elif mode == "rns_tp_auto":
+            if C % n == 0:
+                r_spec = at(-3)
+            elif N % n == 0:
+                r_spec = at(-1)
+                if scale is not None:
+                    s = [None] * len(scale.shape)
+                    s[-1] = mdl
+                    s_spec = P(*s)
+        # spec tree mirrors the value tree (RNSTensor is a registered
+        # pytree): out_shardings/device_put descend it leaf-for-leaf
+        return RNSTensor(residues=r_spec, scale=s_spec, basis=leaf.basis,
+                         bound=leaf.bound, signed=leaf.signed)
+
+    return jax.tree_util.tree_map(rule, tree, is_leaf=is_rns)
+
+
 def param_specs(mesh, cfg: ModelConfig, tree, mode: str | None = None):
     """PartitionSpec pytree for params OR optimizer state (same rules —
     optimizer leaves carry the param's path suffix, so m/v inherit the param
-    layout and Adafactor's vr/vc hit the shape-driven fallback)."""
+    layout and Adafactor's vr/vc hit the shape-driven fallback).
+
+    The ``rns_tp`` / ``rns_tp_col`` / ``rns_tp_auto`` modes place ENCODED
+    serving pytrees for `repro.dist` (residue channel / output column axis
+    over "model", everything else replicated — see `_rns_param_specs`).
+    """
     mode = mode or mode_for(cfg)
+    if mode in ("rns_tp", "rns_tp_col", "rns_tp_auto"):
+        return _rns_param_specs(mesh, tree, mode)
 
     def rule(path, leaf):
         return _param_rule(mesh, mode, _path_str(path), tuple(leaf.shape))
@@ -147,8 +221,16 @@ def batch_specs(mesh, cfg: ModelConfig, batch_tree, mode: str | None = None):
     return jax.tree_util.tree_map_with_path(rule, batch_tree)
 
 
-def cache_specs(mesh, cfg: ModelConfig, cache_tree):
-    """Decode caches: KV sequence-sharded over "model", SSM state-sharded."""
+def cache_specs(mesh, cfg: ModelConfig, cache_tree, *, paged: bool = False):
+    """Decode caches: KV sequence-sharded over "model", SSM state-sharded.
+
+    ``paged=True`` reads the tree as `serve.paged_cache`'s pool layout —
+    k/v leaves are (L, n_phys, block_size, Hk, dh), the SAME rank as a
+    stacked dense cache, so the dense rule would sequence-shard the
+    block_size axis (breaking the pool's physical-block indexing).  Paged
+    pools shard the independent physical-block axis instead and keep block
+    contents whole.
+    """
     dp = dp_axes(mesh)
     mdl = MODEL_AXIS
 
@@ -156,6 +238,10 @@ def cache_specs(mesh, cfg: ModelConfig, cache_tree):
         p = _path_str(path)
         shape = leaf.shape
         name = p.rsplit("/", 1)[-1]
+        if paged and name in ("k", "v") and len(shape) == 5:
+            # (L, n_phys, block_size, Hk, dh): blocks are independent rows
+            # (the trash block rides along); never split inside a block
+            return P(None, _maybe(mesh, dp, shape[1]), None, None, None)
         # stacked: (L, B, S, Hk, dh); per_block: (B, S, Hk, dh)
         stacked = shape and len(shape) in (5,) and name in ("k", "v")
         if name in ("k", "v"):

@@ -136,6 +136,29 @@ def mlp_chain(x, w_gate, w_up, w_down, spec, act):
     return o.reshape(*shp[:-1], o.shape[-1]).astype(x.dtype)
 
 
+def _cat_cols(parts):
+    """Last-axis concatenation spelled as slice-insertions into zeros.
+
+    Bitwise the same data movement as ``jnp.concatenate(parts, -1)``, but
+    deliberately NOT that op: a ``concatenate`` that bridges a ``lax.scan``
+    body's per-iteration weight slices and a shard_map region miscompiles on
+    the XLA CPU backend — the sharded launch consuming (or feeding) it
+    returns garbage columns whose location depends on what else shares the
+    loop body.  The 8-device host mesh is this repo's reference parity
+    platform (tests/test_dist.py), so the QKV weight concat — the one such
+    bridge on the decode path — routes through ``dynamic_update_slice``,
+    which XLA handles correctly in the same position.
+    """
+    tot = sum(p.shape[-1] for p in parts)
+    buf = jnp.zeros(parts[0].shape[:-1] + (tot,), parts[0].dtype)
+    off = 0
+    for p in parts:
+        buf = jax.lax.dynamic_update_slice(
+            buf, p, (0,) * (p.ndim - 1) + (off,))
+        off += p.shape[-1]
+    return buf
+
+
 def linear_qkv(x, ws, spec):
     """Stacked Q/K/V projection: one residue-domain launch for all three.
 
@@ -156,15 +179,15 @@ def linear_qkv(x, ws, spec):
     basis = _chain_basis_of(*ws)
     if basis is None:
         basis = basis_for_int8_matmul(shp[-1])
-        w_cat = jnp.concatenate([jnp.asarray(w) for w in ws], axis=-1)
+        w_cat = _cat_cols([jnp.asarray(w) for w in ws])
     else:
         for w in ws:
             if w.residues.ndim != 3:
                 raise ValueError("linear_qkv needs unbatched (C, K, N) "
                                  f"encoded weights, got {w.residues.shape}")
         w_cat = RNSTensor(
-            residues=jnp.concatenate([w.residues for w in ws], axis=-1),
-            scale=jnp.concatenate([w.scale for w in ws], axis=-1),
+            residues=_cat_cols([w.residues for w in ws]),
+            scale=_cat_cols([w.scale for w in ws]),
             basis=basis, bound=max(w.bound for w in ws),
             signed=all(w.signed for w in ws))
     xa = encode_activation(xf, basis, backend=spec.backend)

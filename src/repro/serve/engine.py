@@ -104,7 +104,8 @@ class Engine:
     """
 
     def __init__(self, cfg: ModelConfig, params, smax: int = 2048,
-                 lanes: Optional[int] = None, verify: Optional[str] = None):
+                 lanes: Optional[int] = None, verify: Optional[str] = None,
+                 mesh=None, dist_layout: Optional[str] = None):
         if verify not in (None, "static"):
             raise ValueError(f"verify={verify!r}: expected None or 'static'")
         if verify == "static":
@@ -127,16 +128,40 @@ class Engine:
         # shapes of the slot chunk.
         self.lanes = None if lanes is None else int(lanes)
         spec = cfg.linear_spec
+        # Multi-device serving (repro.dist, DESIGN.md §17): a mesh turns on
+        # the sharded launch path — every fused megakernel call inside
+        # prefill / the decode scan routes through
+        # `dist.rns_shard.sharded_fused_matmul` while the context below is
+        # active, with greedy outputs bit-identical to the single-device
+        # engine (the parity contract, tests/test_dist.py).
+        self._dist_ctx = None
+        if mesh is not None:
+            from repro.dist import engine as _dist_engine
+
+            self._dist_ctx = _dist_engine.make_context(cfg, mesh,
+                                                       layout=dist_layout)
+        elif dist_layout is not None:
+            raise ValueError("dist_layout= without mesh=: pass the mesh the "
+                             "layout should shard over")
+        # Residue-resident configs (DESIGN.md §14) need the chained MLP's
+        # weights in the chain basis — sized for the gated down-product
+        # bound d_ff·127³, shared by every launch in the chain — while
+        # attention keeps the per-K default.
+        gb = None
         if spec.is_rns and spec.encode_weights:
-            # Residue-resident configs (DESIGN.md §14) need the chained MLP's
-            # weights in the chain basis — sized for the gated down-product
-            # bound d_ff·127³, shared by every launch in the chain — while
-            # attention keeps the per-K default.
-            gb = None
             if spec.domain == "residue" and cfg.glu and cfg.d_ff > 0:
                 from repro.core.rns import basis_for_chain
 
                 gb = {"mlp": basis_for_chain(cfg.d_ff)}
+        if self._dist_ctx is not None:
+            from repro.dist import engine as _dist_engine
+
+            # One-time SHARDED encode + placement: the encode itself runs
+            # under jit(out_shardings=...), so each device forward-converts
+            # only its slice of every weight (dist/engine.place_params).
+            params = _dist_engine.place_params(self._dist_ctx, cfg, params,
+                                               group_basis=gb)
+        elif spec.is_rns and spec.encode_weights:
             params = encode_params(params, backend=spec.backend,
                                    group_basis=gb)
         self.params = params
@@ -150,6 +175,20 @@ class Engine:
         from repro.kernels import tune
 
         self.tune_report = tune.warm_for_config(cfg)
+
+    def _ctx(self):
+        """The engine's dist-context activation (a null context when
+        single-device).  Wrapped around every jit invocation site so the
+        TRACE — where `core.rns_linear`'s fused branches consult
+        `dist.context.current()` — sees the engine's mesh; already-compiled
+        executables are unaffected by the wrapper."""
+        if self._dist_ctx is None:
+            import contextlib
+
+            return contextlib.nullcontext()
+        from repro.dist import context as _dc
+
+        return _dc.use(self._dist_ctx)
 
     # ------------------------------------------------------------- batching -
     def _pack(self, prompts: List[List[int]]):
@@ -195,12 +234,14 @@ class Engine:
         # compile per batch shape, shared); the decode scan is keyed on
         # (max_new_tokens, eos_id) only — temperature and seed ride along
         # as traced operands.
-        logits, cache, pos0 = self._prefill(self.params, batch,
-                                            smax=self.smax)
-        run = self._scan_fn(max_new_tokens, eos_id)
-        first, done0, toks, emit, _ = run(self.params, logits, cache,
-                                          batch["pad"], pos0, jnp.int32(seed),
-                                          jnp.float32(temperature))
+        with self._ctx():
+            logits, cache, pos0 = self._prefill(self.params, batch,
+                                                smax=self.smax)
+            run = self._scan_fn(max_new_tokens, eos_id)
+            first, done0, toks, emit, _ = run(self.params, logits, cache,
+                                              batch["pad"], pos0,
+                                              jnp.int32(seed),
+                                              jnp.float32(temperature))
         first = np.asarray(first)
         toks = np.asarray(toks)                       # (T-1, B)
         emit = np.asarray(emit)                       # (T-1, B) bool
@@ -281,7 +322,9 @@ class Engine:
         path — and emits the identical token stream."""
         B = len(prompts)
         pad = batch["pad"]
-        logits, cache, _ = self._prefill(self.params, batch, smax=self.smax)
+        with self._ctx():
+            logits, cache, _ = self._prefill(self.params, batch,
+                                             smax=self.smax)
         key, k0 = jax.random.split(jax.random.PRNGKey(seed))
         cur = _sample(logits, temperature, k0)
         out = [list(p) for p in prompts]
@@ -296,9 +339,10 @@ class Engine:
             if done.all():
                 break
             pos = jnp.int32(plen + t - 1)
-            logits, cache = self._decode(self.params, cache,
-                                         {"tokens": cur[:, None]}, pos,
-                                         positions=pos - pad)
+            with self._ctx():
+                logits, cache = self._decode(self.params, cache,
+                                             {"tokens": cur[:, None]}, pos,
+                                             positions=pos - pad)
             key, sub = jax.random.split(key)
             cur = _sample(logits, temperature, sub)
             for i in range(B):

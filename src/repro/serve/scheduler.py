@@ -109,7 +109,8 @@ class SlotScheduler:
                  block_size: int = 16, slot_tokens: int = 256,
                  n_blocks: Optional[int] = None, decode_chunk: int = 8,
                  temperature: float = 0.0, eos_id: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, mesh=None,
+                 dist_layout: Optional[str] = None):
         if slot_tokens % block_size:
             raise ValueError("slot_tokens must be a multiple of block_size")
         self.cfg = cfg
@@ -127,7 +128,8 @@ class SlotScheduler:
         # lanes=slots pins the engine's decode batch width to the slot
         # count: XLA reduction order is shape-dependent, so the solo bit-
         # reference must run the same (slots, …) shapes as the chunk fn.
-        self.engine = Engine(cfg, params, smax=slot_tokens, lanes=self.slots)
+        self.engine = Engine(cfg, params, smax=slot_tokens, lanes=self.slots,
+                             mesh=mesh, dist_layout=dist_layout)
         # fail fast on ring-cache architectures (and validate pool shapes)
         init_paged_cache(cfg, 2, block_size, 1)
         self._chunk_fn = self._build_chunk_fn()
@@ -205,8 +207,9 @@ class SlotScheduler:
         batch, _ = self.engine._pack([prompt])
         pbuck = batch["tokens"].shape[1]
         pad = pbuck - plen
-        logits, pf_cache, _ = self.engine._prefill(self.engine.params, batch,
-                                                   smax=pbuck)
+        with self.engine._ctx():
+            logits, pf_cache, _ = self.engine._prefill(self.engine.params,
+                                                       batch, smax=pbuck)
         phys = np.zeros((pbuck,), np.int32)
         offs = np.zeros((pbuck,), np.int32)
         for s in range(pbuck):
@@ -297,10 +300,13 @@ class SlotScheduler:
                             math.ceil(requests[pending[0]].arrival))
                 continue
 
-            cur, done, self._cache, pos, keys, toks, emit = self._chunk_fn(
-                self.engine.params, self._cache, jnp.asarray(self._bt),
-                jnp.asarray(self._cur), jnp.asarray(self._done),
-                jnp.asarray(self._pos), jnp.asarray(self._keys), temp, eos)
+            with self.engine._ctx():
+                cur, done, self._cache, pos, keys, toks, emit = \
+                    self._chunk_fn(
+                        self.engine.params, self._cache,
+                        jnp.asarray(self._bt), jnp.asarray(self._cur),
+                        jnp.asarray(self._done), jnp.asarray(self._pos),
+                        jnp.asarray(self._keys), temp, eos)
             self._cur, self._done = np.array(cur), np.array(done)
             self._pos, self._keys = np.array(pos), np.array(keys)
             toks, emit = np.asarray(toks), np.asarray(emit)

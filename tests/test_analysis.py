@@ -302,3 +302,86 @@ def test_interval_arithmetic_is_exact():
     assert analysis.TOP + a == analysis.TOP
     with pytest.raises(ValueError):
         Interval(5, 2)
+
+
+# =============================== residency: collectives & the wire check ====
+def _shard_map_psum_fn():
+    """A 1-device shard_map whose body hides a psum — descent fodder."""
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+
+    def body(x):
+        return jax.lax.psum(x * 2, "model")
+
+    return shard_map(body, mesh=mesh, in_specs=P(), out_specs=P())
+
+
+def test_residency_descends_into_shard_map():
+    """The walker must see through shard_map bodies: the psum (and the mul)
+    inside count as outside-pallas primitives, and every collective site is
+    recorded with its operand shapes/dtypes (what §17's wire checks and
+    `dist.comms.collective_wire_bytes` consume)."""
+    fn = _shard_map_psum_fn()
+    x = jnp.ones((4, 8, 16), jnp.int32)
+    summ = analysis.summarize_fn(fn, x)
+    # shard_map's rewrite may spell the primitive psum or psum2
+    assert summ.count_outside(("psum", "psum2")) == 1
+    assert summ.collectives == [("psum", (((4, 8, 16), "int32"),))]
+
+
+def test_residency_reduced_wire_flags_residue_slab():
+    """Adversarial: an integer (C, M, N) stack on the wire with C equal to a
+    launch basis' channel count is a leaked residue slab — the check must
+    error naming it; limb planes and float outputs pass."""
+    from collections import Counter
+
+    from repro.analysis import JaxprSummary, check_reduced_wire
+
+    def fake(*sites):
+        return JaxprSummary(outside=Counter(), inside=Counter(),
+                            pallas_calls=0, collectives=list(sites))
+
+    bad = fake(("all_gather", (((4, 8, 32), "int16"),)))
+    rep = check_reduced_wire(bad, channels={4, 5}, nlimbs={2})
+    assert not rep.ok
+    assert "residues crossed the interconnect" in _messages(rep)
+
+    # post-MRC limb planes (leading dim in nlimbs) are the contract — ok
+    limbs = fake(("psum", (((2, 8, 32), "int32"),)))
+    assert check_reduced_wire(limbs, channels={4, 5}, nlimbs={2}).ok
+    # float outputs (column layout's gather) carry no residues — ok
+    flt = fake(("psum", (((4, 8, 32), "float32"),)))
+    assert check_reduced_wire(flt, channels={4, 5}, nlimbs={2}).ok
+    # a basis whose L1 collides with another basis' C must NOT false-positive
+    collide = fake(("psum", (((5, 8, 32), "int32"),)))
+    assert check_reduced_wire(collide, channels={4, 5}, nlimbs={5}).ok
+
+
+def test_residency_reduced_wire_live_trace():
+    """End-to-end on a real trace: the shard_map psum above moves an int32
+    (4, 8, 16) stack — banned when 4 is a channel count, fine when 4 is a
+    whitelisted limb width."""
+    fn = _shard_map_psum_fn()
+    summ = analysis.summarize_fn(fn, jnp.ones((4, 8, 16), jnp.int32))
+    assert not analysis.check_reduced_wire(summ, channels={4}).ok
+    assert analysis.check_reduced_wire(summ, channels={4}, nlimbs={4}).ok
+
+
+def test_residency_catches_rem_hidden_in_shard_map():
+    """Adversarial: a modular reduction smuggled into a shard_map body must
+    still count as outside-pallas — before the walker descended shard_map's
+    sub-jaxpr the resident invariant held vacuously on sharded programs."""
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+    fn = shard_map(lambda x: x % 7, mesh=mesh, in_specs=P(), out_specs=P())
+    summ = analysis.summarize_fn(fn, jnp.arange(16))
+    assert summ.count_outside(("rem", "mod")) >= 1
+    rep = analysis.check_resident(summ)
+    assert not rep.ok
+    assert "outside" in _messages(rep)

@@ -118,3 +118,86 @@ def test_dryrun_subprocess_cell():
     assert rec["status"] == "ok", rec.get("error")
     assert rec["n_devices"] == 256
     assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+# ======================================================== rns dist modes ====
+# repro.dist placement (DESIGN.md §17): encoded RNSTensor leaves shard over
+# "model", everything float replicates (bit-identity keeps float reductions
+# whole).  FakeMesh suffices — the rules read only shapes and axis sizes.
+
+MESH_42 = FakeMesh({"data": 4, "model": 2})
+
+
+def _rns_tree(N=12, stacked=True):
+    """A stacked (L, C, K, N) encoded weight + a float leaf, C = 4."""
+    from repro.core.rns import basis_for_int8_matmul
+    from repro.core.rns_tensor import RNSTensor
+
+    b = basis_for_int8_matmul(8)
+    C = len(b.moduli)
+    shape = (3, C, 8, N) if stacked else (C, 8, N)
+    wt = RNSTensor(residues=jnp.zeros(shape, jnp.int16),
+                   scale=jnp.zeros(shape[:-3] + (1, N), jnp.float32),
+                   basis=b, bound=127, signed=True)
+    return {"w": wt, "norm": jnp.zeros((8,), jnp.float32)}, C
+
+
+def test_rns_tp_shards_channel_axis():
+    cfg = get_config("smollm-135m")
+    tree, C = _rns_tree()
+    assert C % 2 == 0
+    specs = param_specs(MESH_42, cfg, tree, "rns_tp")
+    # channel axis is −3 of the (L, C, K, N) stack; scale stays whole
+    assert specs["w"].residues == P(None, "model", None, None)
+    assert specs["w"].scale == P(None, None, None)
+    assert specs["norm"] == P(None)                  # float leaves replicate
+
+
+def test_rns_tp_strict_rejects_indivisible_channels():
+    cfg = get_config("smollm-135m")
+    tree, C = _rns_tree()
+    bad = FakeMesh({"data": 4, "model": 3})          # 3 does not divide C=4
+    with pytest.raises(ValueError, match="channel count"):
+        param_specs(bad, cfg, tree, "rns_tp")
+
+
+def test_rns_tp_col_shards_columns_and_scale():
+    cfg = get_config("smollm-135m")
+    tree, _ = _rns_tree(N=12)
+    specs = param_specs(MESH_42, cfg, tree, "rns_tp_col")
+    assert specs["w"].residues == P(None, None, None, "model")
+    assert specs["w"].scale == P(None, None, "model")  # (L, 1, N) follows N
+
+
+def test_rns_tp_auto_prefers_channels_then_columns_then_replicates():
+    cfg = get_config("smollm-135m")
+    tree, _ = _rns_tree(N=12)
+    specs = param_specs(MESH_42, cfg, tree, "rns_tp_auto")
+    assert specs["w"].residues == P(None, "model", None, None)   # C wins
+    mesh3 = FakeMesh({"data": 4, "model": 3})        # C=4 no, N=12 yes
+    specs = param_specs(mesh3, cfg, tree, "rns_tp_auto")
+    assert specs["w"].residues == P(None, None, None, "model")
+    assert specs["w"].scale == P(None, None, "model")
+    tree10, _ = _rns_tree(N=10)                      # neither divides by 3
+    specs = param_specs(mesh3, cfg, tree10, "rns_tp_auto")
+    assert specs["w"].residues == P(None, None, None, None)
+    assert specs["w"].scale == P(None, None, None)
+
+
+def test_cache_specs_paged_pool_sharding():
+    """Paged pools shard the independent physical-block axis (−4), never the
+    block contents — the dense rank-5 rule would split block_size, breaking
+    the pool's physical indexing."""
+    cfg = get_config("smollm-135m")
+    pool = {"sub0": {
+        "k": jnp.zeros((2, 32, 16, 3, 8), jnp.float32),  # (L, n_phys, bs, Hk, dh)
+        "v": jnp.zeros((2, 32, 16, 3, 8), jnp.float32),
+        "pos": jnp.zeros((8,), jnp.int32),
+    }}
+    specs = cache_specs(MESH, cfg, pool, paged=True)
+    assert specs["sub0"]["k"] == P(None, ("data",), None, None, None)
+    assert specs["sub0"]["v"] == P(None, ("data",), None, None, None)
+    assert specs["sub0"]["pos"] == P(None)
+    # dense rank-5 rule (paged=False) would have sequence-sharded axis 2:
+    dense = cache_specs(MESH, cfg, pool, paged=False)
+    assert dense["sub0"]["k"] != specs["sub0"]["k"]
